@@ -1,0 +1,44 @@
+"""Benchmark harness entry point: ``python -m benchmarks.run [--only ...]``.
+
+One function per paper table/figure (see ``benchmarks.suite``). Prints
+``name,us_per_call,derived`` CSV. The full suite runs in a few minutes on a
+single CPU core; ``--only fig9`` style substring filters select subsets.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks.suite import ALL_BENCHES
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in ALL_BENCHES:
+        if args.only and args.only not in bench.__name__:
+            continue
+        t0 = time.time()
+        try:
+            rows = bench()
+        except Exception as e:  # keep the suite running; report at the end
+            print(f"{bench.__name__},NaN,ERROR:{e!r}", flush=True)
+            failures += 1
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.3f},{derived}", flush=True)
+        print(f"# {bench.__name__} took {time.time() - t0:.1f}s",
+              file=sys.stderr, flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmarks failed")
+
+
+if __name__ == "__main__":
+    main()

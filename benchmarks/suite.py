@@ -1,0 +1,418 @@
+"""Benchmark suite: one entry per paper table/figure (DESIGN.md §6 index).
+
+Each function returns a list of CSV rows ``(name, us_per_call, derived)``:
+``us_per_call`` is the headline time of the measured object (or the metric
+itself scaled to us where noted), ``derived`` carries the figure-specific
+quantity (drift, p-value, invalid fraction, ...).
+
+Simulation-backed figures use the calibrated cluster simulator
+(:mod:`repro.core.simnet`); ``real_*`` entries time actual jitted JAX
+executables through the same experimental design (the deployment path).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    ClockParams,
+    ExperimentDesign,
+    SimNet,
+    TestCase,
+    analyze_records,
+    autocorr_significant_lags,
+    compare_tables,
+    jarque_bera,
+    make_op,
+    make_sync,
+    probe_barrier_skew,
+    run_barrier_timed,
+    run_design,
+    run_windowed,
+    true_offsets,
+    tukey_filter,
+    wilcoxon_rank_sum,
+)
+
+SYNC_KW = dict(n_fitpts=200, n_exchanges=40)
+ALGOS = ("skampi", "netgauge", "jk", "hca", "hca2")
+
+
+def _kw(name):
+    return SYNC_KW if name in ("jk", "hca", "hca2") else {}
+
+
+def _campaign(seed0, n=10, nrep=60, msizes=(256, 4096), op_kw=None, p=8):
+    cases = [TestCase("allreduce", m) for m in msizes]
+    op_kw = op_kw or {}
+
+    def epoch_factory(epoch):
+        net = SimNet(p, seed=seed0 + 1000 * epoch)
+        sync = make_sync("hca", **SYNC_KW).synchronize(net)
+        return (net, sync, make_op("allreduce", **op_kw))
+
+    def measure(ctx, case, nrep):
+        net, sync, op = ctx
+        wr = run_windowed(net, sync, op, case.msize, nrep, win_size=400e-6)
+        return wr.valid_times if wr.valid_times.size else wr.times
+
+    records = run_design(ExperimentDesign(n, nrep, seed=seed0),
+                         epoch_factory, measure, cases)
+    return analyze_records(records)
+
+
+# --------------------------------------------------------------------- T1
+def bench_table1_variability():
+    """Table 1: min/max of per-epoch means under the NAIVE method (single
+    mpirun per number) vs the paper method's dispersion."""
+    rows = []
+    for msize in (16, 256, 4096, 32768):
+        means = []
+        for epoch in range(30):
+            net = SimNet(16, seed=9000 + epoch)
+            sync = make_sync("hca", **SYNC_KW).synchronize(net)
+            wr = run_windowed(net, sync, make_op("bcast"), msize, 100,
+                              win_size=400e-6)
+            means.append(np.mean(tukey_filter(wr.valid_times)))
+        mn, mx = float(np.min(means)), float(np.max(means))
+        rows.append((f"table1/bcast@{msize}", mn * 1e6,
+                     f"maxdiff={(mx - mn) / mn * 100:.2f}%"))
+    return rows
+
+
+# --------------------------------------------------------------------- F3
+def bench_fig3_clock_drift():
+    """Fig. 3: raw clock drift between a reference host and others."""
+    net = SimNet(7, seed=1)
+    rows = []
+    horizon = 50.0
+    net.sleep_all(horizon)
+    for r in range(1, 7):
+        drift = net.true_offset(r, 0)
+        rows.append((f"fig3/host{r}_drift_50s", abs(drift) * 1e6,
+                     f"{drift * 1e6:+.1f}us/50s"))
+    return rows
+
+
+# --------------------------------------------------------------------- F5
+def bench_fig5_freq_estimation():
+    """Figs. 4-5: frequency-estimation error blows up offset-only drift."""
+    rows = []
+    for label, fe in (("fixed_freq", 0.0), ("estimated_freq", 4.3e-6)):
+        offs = []
+        for seed in range(5):
+            net = SimNet(16, seed=500 + seed,
+                         clocks=ClockParams(skew_sigma=1e-7, freq_est_sigma=fe))
+            res = make_sync("netgauge").synchronize(net)
+            net.sleep_all(10.0)
+            offs.append(np.abs(true_offsets(net, res))[1:].max())
+        rows.append((f"fig5/{label}_drift_10s", float(np.median(offs)) * 1e6,
+                     f"n={len(offs)}"))
+    return rows
+
+
+# --------------------------------------------------------------------- F6
+def bench_fig6_runtime_drift():
+    """Fig. 6: windowed run-times drift under offset-only sync; stable under
+    drift-corrected sync and under barrier."""
+    rows = []
+    nrep, bins = 2000, 10
+    for name in ("skampi", "hca"):
+        net = SimNet(16, seed=6)
+        sync = make_sync(name, **_kw(name)).synchronize(net)
+        wr = run_windowed(net, sync, make_op("bcast", autocorr=0.0), 8192,
+                          nrep, win_size=300e-6)
+        t = wr.times.reshape(bins, -1).mean(axis=1)
+        slope = float(np.polyfit(np.arange(bins), t, 1)[0])
+        rows.append((f"fig6/{name}_first_bin", t[0] * 1e6,
+                     f"slope={slope * 1e6:+.3f}us/bin last={t[-1] * 1e6:.1f}us"))
+    net = SimNet(16, seed=6)
+    br = run_barrier_timed(net, make_op("bcast", autocorr=0.0), 8192, nrep)
+    t = br.times_local.reshape(bins, -1).mean(axis=1)
+    slope = float(np.polyfit(np.arange(bins), t, 1)[0])
+    rows.append(("fig6/barrier_first_bin", t[0] * 1e6,
+                 f"slope={slope * 1e6:+.3f}us/bin last={t[-1] * 1e6:.1f}us"))
+    return rows
+
+
+# --------------------------------------------------------------------- F8
+def bench_fig8_offset_after_sync():
+    """Fig. 8: max global-clock offset right after synchronization vs p."""
+    rows = []
+    for p in (8, 32):
+        for name in ALGOS:
+            offs = []
+            for seed in range(3):
+                net = SimNet(p, seed=800 + seed)
+                res = make_sync(name, **_kw(name)).synchronize(net)
+                offs.append(np.abs(true_offsets(net, res))[1:].max())
+            rows.append((f"fig8/p{p}/{name}", float(np.median(offs)) * 1e6,
+                         f"n=3"))
+    return rows
+
+
+# --------------------------------------------------------------------- F9
+def bench_fig9_drift_over_time():
+    """Fig. 9: offset 0/10/20 s after sync for every algorithm."""
+    rows = []
+    for name in ALGOS:
+        net = SimNet(16, seed=9)
+        res = make_sync(name, **_kw(name)).synchronize(net)
+        o0 = np.abs(true_offsets(net, res))[1:].max()
+        net.sleep_all(10.0)
+        o10 = np.abs(true_offsets(net, res))[1:].max()
+        net.sleep_all(10.0)
+        o20 = np.abs(true_offsets(net, res))[1:].max()
+        rows.append((f"fig9/{name}", o20 * 1e6,
+                     f"t0={o0 * 1e6:.2f}us t10={o10 * 1e6:.2f}us"))
+    return rows
+
+
+# -------------------------------------------------------------------- F10
+def bench_fig10_pareto():
+    """Fig. 10: offset-after-5s vs sync-phase duration Pareto frontier."""
+    rows = []
+    settings = [("skampi", {}), ("netgauge", {}),
+                ("jk", dict(n_fitpts=60, n_exchanges=20)),
+                ("jk", dict(n_fitpts=200, n_exchanges=40)),
+                ("hca", dict(n_fitpts=60, n_exchanges=20)),
+                ("hca", dict(n_fitpts=200, n_exchanges=40)),
+                ("hca2", dict(n_fitpts=200, n_exchanges=40))]
+    for name, kw in settings:
+        net = SimNet(32, seed=10)
+        res = make_sync(name, **kw).synchronize(net)
+        net.sleep_all(5.0)
+        off = np.abs(true_offsets(net, res))[1:].max()
+        tag = f"{name}({kw.get('n_fitpts', '-')},{kw.get('n_exchanges', '-')})"
+        rows.append((f"fig10/{tag}", res.duration * 1e6,
+                     f"offset5s={off * 1e6:.2f}us msgs={res.n_messages}"))
+    # barrier reference line
+    net = SimNet(32, seed=10)
+    exits = net.dissemination_barrier()
+    rows.append(("fig10/barrier_skew", float(exits.max() - exits.min()) * 1e6,
+                 "imbalance reference"))
+    return rows
+
+
+# ---------------------------------------------------------------- F11/F12
+def bench_fig11_12_barrier():
+    """Figs. 11-12: barrier-based vs window-based measurement; exit skew."""
+    op_kw = dict(rank_imbalance=0.01, noise_sigma=0.01, tail_prob=0.0)
+    net = SimNet(16, seed=11)
+    sync = make_sync("hca", **SYNC_KW).synchronize(net)
+    wr = run_windowed(net, sync, make_op("allreduce", **op_kw), 32768, 300,
+                      win_size=500e-6)
+    net2 = SimNet(16, seed=11)
+    br = run_barrier_timed(net2, make_op("allreduce", **op_kw), 32768, 300,
+                           barrier_exit_skew=40e-6)
+    rows = [
+        ("fig11/window_global", wr.valid_times.mean() * 1e6, ""),
+        ("fig11/barrier_local_max", np.mean(br.times_local) * 1e6,
+         "includes exit skew"),
+    ]
+    net3 = SimNet(16, seed=12)
+    prof = probe_barrier_skew(net3, nrep=300, barrier_exit_skew=40e-6)
+    rows.append(("fig12/mvapich_like_skew", prof.mean(axis=0).max() * 1e6,
+                 "max mean exit offset"))
+    net4 = SimNet(16, seed=12)
+    prof = probe_barrier_skew(net4, nrep=300, use_library_barrier=False)
+    rows.append(("fig12/dissemination_skew", prof.mean(axis=0).max() * 1e6,
+                 "framework barrier"))
+    return rows
+
+
+# ---------------------------------------------------------------- F14/F15
+def bench_fig14_15_distributions():
+    """Fig. 14: non-normal, bimodal run-time distributions. Fig. 15: sample
+    size for the CLT to hold on sample means."""
+    net = SimNet(16, seed=14)
+    sync = make_sync("hca", **SYNC_KW).synchronize(net)
+    wr = run_windowed(net, sync, make_op("scan"), 10000, 3000,
+                      win_size=500e-6)
+    x = wr.valid_times
+    jb, p = jarque_bera(x)
+    rows = [("fig14/scan_raw_nonnormal", x.mean() * 1e6,
+             f"JB={jb:.1f} p={p:.1e} (non-normal expected)")]
+    rng = np.random.default_rng(0)
+    for n in (10, 30):
+        means = np.array([rng.choice(x, n).mean() for _ in range(2000)])
+        jb, p = jarque_bera(means)
+        rows.append((f"fig15/mean_sample_n{n}", means.mean() * 1e6,
+                     f"JB={jb:.1f} p={p:.1e}"))
+    return rows
+
+
+# ---------------------------------------------------------------- F16/F17
+def bench_fig16_17_mpirun_factor():
+    """Figs. 16-17: distinct launch epochs produce significantly different
+    means; the distribution of epoch means is ~normal."""
+    table = _campaign(1600, n=20, nrep=80, msizes=(8192,),
+                      op_kw=dict(epoch_bias_sigma=0.03))
+    case = table.cases()[0]
+    means = table.means(case)
+    spread = (means.max() - means.min()) / means.mean() * 100
+    jb, p = jarque_bera(means)
+    return [
+        ("fig16/epoch_mean_spread", means.mean() * 1e6,
+         f"spread={spread:.1f}% over {means.size} epochs"),
+        ("fig17/epoch_means_normality", means.std() * 1e6,
+         f"JB p={p:.2f} (normal expected)"),
+    ]
+
+
+# -------------------------------------------------------------------- F18
+def bench_fig18_autocorrelation():
+    """Fig. 18: consecutive measurements are correlated; sub-sampling
+    removes the correlation without moving the mean."""
+    net = SimNet(16, seed=18)
+    sync = make_sync("hca", **SYNC_KW).synchronize(net)
+    wr = run_windowed(net, sync, make_op("bcast", autocorr=0.5), 1000, 2000,
+                      win_size=300e-6)
+    x = wr.times
+    lags = autocorr_significant_lags(x, 20)
+    sub = x[:: 10]
+    lags_sub = autocorr_significant_lags(sub, 20)
+    return [
+        ("fig18/raw", x.mean() * 1e6, f"sig_lags={lags.size}"),
+        ("fig18/subsampled_10x", sub.mean() * 1e6,
+         f"sig_lags={lags_sub.size} dmean={abs(sub.mean() - x.mean()) / x.mean() * 100:.2f}%"),
+    ]
+
+
+# ---------------------------------------------------------------- F21/F22
+def bench_fig21_22_window_size():
+    """Figs. 21-22: window size vs invalid fraction and run-time stability."""
+    rows = []
+    for win in (30e-6, 100e-6, 300e-6, 1000e-6):
+        net = SimNet(16, seed=21)
+        sync = make_sync("hca", **SYNC_KW).synchronize(net)
+        wr = run_windowed(net, sync, make_op("alltoall"), 8192, 400,
+                          win_size=win)
+        med = float(np.median(wr.valid_times)) * 1e6 if wr.valid_times.size else 0.0
+        rows.append((f"fig21/win{int(win * 1e6)}us", med,
+                     f"invalid={wr.invalid_fraction * 100:.1f}%"))
+    return rows
+
+
+# ------------------------------------------------------------ F27/F28/F30
+def bench_fig27_30_comparison():
+    """Figs. 27/28/30: naive single-epoch comparison flips; the Wilcoxon
+    comparison on per-epoch medians is stable and directional."""
+    lib_a = dict(gamma=2.0e-6)                       # "library A"
+    lib_b = dict(gamma=2.0e-6, alpha=3.6e-6)         # "library B": slower alpha
+    table_a = _campaign(2700, n=12, nrep=60, op_kw=lib_a)
+    table_b = _campaign(2900, n=12, nrep=60, op_kw=lib_b)
+    rows = []
+    # naive: compare epoch-0 means only
+    for case in table_a.cases():
+        a0 = [s.mean for s in table_a.summaries
+              if s.case.key() == case.key() and s.epoch == 0][0]
+        b0 = [s.mean for s in table_b.summaries
+              if s.case.key() == case.key() and s.epoch == 0][0]
+        rows.append((f"fig27/naive@{case.msize}", a0 * 1e6,
+                     f"A/B={a0 / b0:.3f} (single epoch — unreliable)"))
+    for row in compare_tables(table_a, table_b):
+        rows.append((f"fig28/wilcoxon@{row.case.msize}", row.avg_a * 1e6,
+                     f"p2={row.p_two_sided:.1e}{row.stars} "
+                     f"pA<B={row.p_a_less:.1e} verdict={row.verdict}"))
+    return rows
+
+
+# -------------------------------------------------------------------- F31
+def bench_fig31_reproducibility():
+    """Fig. 31: dispersion of normalized results across full repetitions —
+    naive (1 epoch x default reps) vs the paper method (n epochs)."""
+    rows = []
+    msize = 1024
+
+    def naive_trial(seed):
+        net = SimNet(16, seed=seed)
+        sync = make_sync("skampi").synchronize(net)
+        wr = run_windowed(net, sync, make_op("bcast"), msize, 60,
+                          win_size=300e-6)
+        return float(np.mean(wr.times))
+
+    naive = np.array([naive_trial(31000 + t) for t in range(6)])
+    rows.append(("fig31/naive_dispersion", naive.mean() * 1e6,
+                 f"max/min={naive.max() / naive.min():.3f}"))
+
+    trials = []
+    for t in range(4):
+        table = _campaign(32000 + 37 * t, n=8, nrep=60, msizes=(msize,))
+        trials.append(float(np.mean(table.means(table.cases()[0]))))
+    trials = np.array(trials)
+    rows.append(("fig31/method_dispersion", trials.mean() * 1e6,
+                 f"max/min={trials.max() / trials.min():.3f}"))
+    return rows
+
+
+# ------------------------------------------------------------------- real
+def bench_real_step_functions():
+    """The deployment path: real jitted JAX executables timed with the full
+    method (launch epochs = fresh jit caches) and compared with Wilcoxon.
+
+    Object under test: a smoke-config train_step at two remat settings —
+    a genuine performance question answered statistically on this host.
+    """
+    import jax
+
+    from repro.configs import get_smoke
+    from repro.core.runtime_meter import MeterConfig, make_jax_measure
+    from repro.launch.steps import make_train_step
+    from repro.models import init_params
+    from repro.optim import init_opt_state
+
+    cfg = get_smoke("gemma2-2b")
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    toks = jax.random.randint(key, (4, 64), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+
+    def build(remat):
+        def _build(epoch):
+            state = {"params": params, "opt": init_opt_state(params)}
+            step = jax.jit(make_train_step(cfg, remat=remat))
+
+            def call():
+                return step(state, batch)[1]["loss"]
+
+            return {"train_step": call}
+        return _build
+
+    rows = []
+    tables = {}
+    for label, remat in (("remat", True), ("noremat", False)):
+        epoch_factory, measure = make_jax_measure(
+            build(remat), MeterConfig(warmup=2))
+        records = run_design(ExperimentDesign(4, 15, seed=1),
+                             epoch_factory, measure,
+                             [TestCase("train_step", 0)])
+        tables[label] = analyze_records(records)
+        med = tables[label].medians(tables[label].cases()[0])
+        rows.append((f"real/train_step_{label}", float(np.mean(med)) * 1e6,
+                     f"epochs={med.size}"))
+    a = tables["remat"].medians(tables["remat"].cases()[0])
+    b = tables["noremat"].medians(tables["noremat"].cases()[0])
+    res = wilcoxon_rank_sum(a, b)
+    rows.append(("real/remat_vs_noremat", float(np.mean(a)) * 1e6,
+                 f"p2={res.p_value:.2e}{res.stars}"))
+    return rows
+
+
+ALL_BENCHES = [
+    bench_table1_variability,
+    bench_fig3_clock_drift,
+    bench_fig5_freq_estimation,
+    bench_fig6_runtime_drift,
+    bench_fig8_offset_after_sync,
+    bench_fig9_drift_over_time,
+    bench_fig10_pareto,
+    bench_fig11_12_barrier,
+    bench_fig14_15_distributions,
+    bench_fig16_17_mpirun_factor,
+    bench_fig18_autocorrelation,
+    bench_fig21_22_window_size,
+    bench_fig27_30_comparison,
+    bench_fig31_reproducibility,
+    bench_real_step_functions,
+]

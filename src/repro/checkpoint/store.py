@@ -1,0 +1,140 @@
+"""Mesh-agnostic checkpointing with async save (fault tolerance substrate).
+
+Checkpoints store every leaf as a full logical array (``.npz`` + a JSON
+tree manifest), so a restart may use a *different* mesh shape — the elastic
+path: save on 2x16x16, restore on 16x16 (or on the CPU test mesh). Saves
+run on a background thread off the training loop (async checkpointing);
+``save`` is atomic via tmpdir rename. Retention keeps the newest K steps.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointConfig", "CheckpointStore"]
+
+
+@dataclass(frozen=True)
+class CheckpointConfig:
+    directory: str = "checkpoints"
+    keep: int = 3
+    async_save: bool = True
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointStore:
+    def __init__(self, cfg: CheckpointConfig):
+        self.cfg = cfg
+        os.makedirs(cfg.directory, exist_ok=True)
+        self._pending: threading.Thread | None = None
+
+    # ------------------------------------------------------------------ save
+    def _write(self, step: int, leaves, treedef_repr: str):
+        final = os.path.join(self.cfg.directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        arrays = {}
+        dtypes = {}
+        for i, l in enumerate(leaves):
+            a = np.asarray(l)
+            dtypes[f"leaf_{i}"] = str(a.dtype)
+            if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+                a = a.view(np.uint16)  # npz cannot store ml_dtypes natively
+            arrays[f"leaf_{i}"] = a
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "n_leaves": len(leaves),
+                       "treedef": treedef_repr, "dtypes": dtypes}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._retain()
+
+    def _retain(self):
+        steps = self.all_steps()
+        for s in steps[: -self.cfg.keep]:
+            shutil.rmtree(os.path.join(self.cfg.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def save(self, step: int, state) -> None:
+        """Snapshot state (device->host copy happens synchronously; the
+        file write happens on a background thread when async_save)."""
+        self.wait()
+        leaves, treedef = _flatten(state)
+        host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+        if self.cfg.async_save:
+            t = threading.Thread(
+                target=self._write, args=(step, host_leaves, str(treedef)))
+            t.start()
+            self._pending = t
+        else:
+            self._write(step, host_leaves, str(treedef))
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.cfg.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like_tree, step: int | None = None, shardings=None):
+        """Restore into the structure of ``like_tree``; optionally place
+        shards per ``shardings`` (a matching tree of NamedSharding) —
+        the elastic re-mesh path."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            return None, None
+        path = os.path.join(self.cfg.directory, f"step_{step:08d}")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        dtypes = manifest.get("dtypes", {})
+        import ml_dtypes
+
+        def _undo(name):
+            a = data[name]
+            want = dtypes.get(name)
+            if want and str(a.dtype) != want:
+                a = a.view(ml_dtypes.bfloat16) if want == "bfloat16" \
+                    else a.astype(want)
+            return a
+
+        leaves, treedef = _flatten(like_tree)
+        restored = [_undo(f"leaf_{i}") for i in range(len(leaves))]
+        if shardings is not None:
+            sh_leaves = jax.tree_util.tree_leaves(
+                shardings, is_leaf=lambda x: hasattr(x, "addressable_devices"))
+            restored = [jax.device_put(a, s)
+                        for a, s in zip(restored, sh_leaves)]
+        else:
+            restored = [
+                np.asarray(a).astype(l.dtype) if hasattr(l, "dtype") else a
+                for a, l in zip(restored, leaves)
+            ]
+        return jax.tree_util.tree_unflatten(treedef, restored), step

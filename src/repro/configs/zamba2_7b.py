@@ -1,0 +1,45 @@
+"""zamba2-7b [hybrid]: Mamba-2 backbone + shared attention blocks.
+
+81L d_model=3584 32H (kv=32) d_ff=14336 vocab=32000 ssm_state=64
+[arXiv:2411.15242]. The shared transformer block (attention + FFN with a
+single set of weights) is applied every 6th layer; its KV cache is allocated
+per application (14 applications), not per layer.
+"""
+
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    attn_every=6,
+    act="geglu",
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="zamba2-smoke",
+    family="hybrid",
+    n_layers=5,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=256,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=16,
+    ssm_chunk=8,
+    attn_every=2,
+    act="geglu",
+    dtype="float32",
+)

@@ -1,0 +1,75 @@
+"""repro.core — the paper's contribution as a composable library.
+
+Hunold & Carpen-Amarie, *MPI Benchmarking Revisited: Experimental Design and
+Reproducibility* (2015): drift-corrected clock synchronization (HCA),
+window-based process synchronization, experimental-factor control, and a
+statistically sound, reproducible benchmarking method for distributed
+collective operations — adapted here to JAX/TPU collectives and step
+functions (see DESIGN.md §2 for the hardware-adaptation map).
+"""
+
+from .clocks import IDENTITY_MODEL, AdjustedClock, Clock, LinearModel, PerfClock, SimClock, linear_fit
+from .compare import ComparisonRow, compare_tables, format_comparison, naive_comparison
+from .design import (
+    EpochSummary,
+    ExperimentDesign,
+    MeasurementRecord,
+    ResultTable,
+    TestCase,
+    analyze_records,
+    run_design,
+)
+from .factors import FactorSet, assert_comparable, capture_factors
+from .mpi_ops import OP_LIBRARY, CollectiveExecution, SimCollective, make_op
+from .simnet import ClockParams, NetParams, SimNet
+from .stats import (
+    autocorr_significant_lags,
+    autocorrelation,
+    coefficient_of_variation,
+    jarque_bera,
+    mean_confidence_interval,
+    normal_ppf,
+    significance_stars,
+    t_ppf,
+    tukey_filter,
+    wilcoxon_rank_sum,
+)
+from .sync import (
+    ALGORITHMS,
+    HCASync,
+    JKSync,
+    NetgaugeSync,
+    SkampiSync,
+    SyncResult,
+    make_sync,
+    probe_offsets,
+    true_offsets,
+)
+from .timing import BarrierRun, probe_barrier_skew, run_barrier_timed
+from .window import WindowRun, run_windowed
+
+__all__ = [
+    # clocks
+    "Clock", "PerfClock", "SimClock", "AdjustedClock", "LinearModel",
+    "IDENTITY_MODEL", "linear_fit",
+    # simulation
+    "SimNet", "NetParams", "ClockParams", "SimCollective",
+    "CollectiveExecution", "make_op", "OP_LIBRARY",
+    # sync
+    "ALGORITHMS", "make_sync", "SkampiSync", "NetgaugeSync", "JKSync",
+    "HCASync", "SyncResult", "probe_offsets", "true_offsets",
+    # measurement
+    "run_windowed", "WindowRun", "run_barrier_timed", "BarrierRun",
+    "probe_barrier_skew",
+    # statistics
+    "tukey_filter", "wilcoxon_rank_sum", "significance_stars",
+    "mean_confidence_interval", "jarque_bera", "autocorrelation",
+    "autocorr_significant_lags", "coefficient_of_variation", "normal_ppf",
+    "t_ppf",
+    # design & comparison
+    "ExperimentDesign", "TestCase", "run_design", "analyze_records",
+    "ResultTable", "EpochSummary", "MeasurementRecord",
+    "compare_tables", "ComparisonRow", "naive_comparison", "format_comparison",
+    # factors
+    "FactorSet", "capture_factors", "assert_comparable",
+]

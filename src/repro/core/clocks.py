@@ -1,0 +1,199 @@
+"""Clock models and linear drift models (paper §3.1, §4.3-4.4).
+
+Terminology follows Kshemkalyani & Singhal as used in the paper:
+  * clock *offset*: difference between the times reported by two clocks,
+  * clock *skew*:   difference in the clocks' frequencies,
+  * clock *drift*:  difference between two clocks over a period of time.
+
+A hardware clock is modeled as an affine distortion of true time ``t``::
+
+    local(t) = offset + (1 + skew) * t            (+ optional random walk)
+
+which is exactly the linearity assumption of Jones & Koenig [19] that the
+paper adopts (§4.3) and that Fig. 3 verifies empirically (drift is linear
+over the tens-of-seconds horizon of a benchmark run).
+
+``LinearModel`` is the paper's (slope, intercept) drift model: a process
+``r`` learns ``d_r(t_r) = t_r - t_ref ~= slope * t_r + intercept`` from
+ping-pong exchanges, and normalizes local to global (reference) time with
+Algorithm 16::
+
+    global(t_r) = t_r - (slope * t_r + intercept)
+
+``LinearModel.merge`` is MERGE_LMS of Algorithm 4 (the exact transitive
+composition of child-time-parameterized drift models; see the note below
+about Eq. (1) in the paper).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = [
+    "Clock",
+    "PerfClock",
+    "SimClock",
+    "AdjustedClock",
+    "LinearModel",
+    "IDENTITY_MODEL",
+    "linear_fit",
+]
+
+
+class Clock:
+    """Abstract local clock. ``read(t_true)`` maps true time -> local time.
+
+    Real clocks ignore ``t_true`` and read the host monotonic clock. The
+    simulation passes the discrete-event true time explicitly.
+    """
+
+    def read(self, t_true: float) -> float:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class PerfClock(Clock):
+    """Monotonic host clock (the TPU-host analogue of fixed-frequency RDTSCP).
+
+    The paper (§3.4) pins the frequency and uses RDTSCP; on a TPU host we
+    use CLOCK_MONOTONIC via ``time.perf_counter_ns`` which is likewise
+    unaffected by NTP slewing of the wall clock on Linux.
+    """
+
+    def read(self, t_true: float = 0.0) -> float:
+        return time.perf_counter_ns() * 1e-9
+
+
+@dataclass
+class SimClock(Clock):
+    """Simulated hardware clock with offset, skew and optional noise.
+
+    ``local(t) = offset + (1 + skew) * t + rw(t)`` where ``rw`` is an
+    optional random-walk component (std ``rw_sigma`` per second) modelling
+    oscillator wander.  ``scale_error`` models the *frequency estimation*
+    error of §4.2.1 (Netgauge's HRT_CALIBRATE): reading the clock through a
+    mis-estimated frequency multiplies elapsed local time by
+    ``(1 + scale_error)``; the paper measures ~4.3e-6 relative error, i.e.
+    an extra microsecond of drift per second.
+    """
+
+    offset: float = 0.0
+    skew: float = 0.0
+    rw_sigma: float = 0.0
+    scale_error: float = 0.0
+    seed: int = 0
+    _rng: np.random.Generator = field(init=False, repr=False)
+    _rw_t: float = field(default=0.0, init=False, repr=False)
+    _rw_x: float = field(default=0.0, init=False, repr=False)
+
+    def __post_init__(self) -> None:
+        self._rng = np.random.default_rng(self.seed)
+
+    def _random_walk(self, t_true: float) -> float:
+        if self.rw_sigma <= 0.0:
+            return 0.0
+        dt = t_true - self._rw_t
+        if dt > 0:
+            self._rw_x += float(self._rng.normal(0.0, self.rw_sigma * np.sqrt(dt)))
+            self._rw_t = t_true
+        return self._rw_x
+
+    def read(self, t_true: float) -> float:
+        raw = self.offset + (1.0 + self.skew) * t_true + self._random_walk(t_true)
+        return raw * (1.0 + self.scale_error)
+
+    def true_offset_to(self, other: "SimClock", t_true: float) -> float:
+        """Ground-truth offset ``self - other`` at true time ``t_true``."""
+        return self.read(t_true) - other.read(t_true)
+
+
+@dataclass
+class AdjustedClock(Clock):
+    """Logical local clock starting at zero (Alg. 3 line 1 / GET_ADJUSTED_TIME).
+
+    The paper subtracts the initially-read timestamp so that the intercept of
+    the drift model represents the offset at (local) time zero instead of at
+    an arbitrary hardware epoch.
+    """
+
+    base: Clock
+    initial_time: float = 0.0
+
+    def read(self, t_true: float) -> float:
+        return self.base.read(t_true) - self.initial_time
+
+
+@dataclass(frozen=True)
+class LinearModel:
+    """Linear model of the clock drift of one process relative to a reference.
+
+    ``d(t_local) = slope * t_local + intercept ~= t_local - t_ref``.
+    """
+
+    slope: float = 0.0
+    intercept: float = 0.0
+
+    def normalize(self, local_time: float) -> float:
+        """Algorithm 16: local time -> reference (global) time."""
+        return local_time - (local_time * self.slope + self.intercept)
+
+    def denormalize(self, global_time: float) -> float:
+        """Inverse of :meth:`normalize` (exact)."""
+        return (global_time + self.intercept) / (1.0 - self.slope)
+
+    def with_intercept_from_offset(self, diff: float, diff_timestamp: float) -> "LinearModel":
+        """COMPUTE_AND_SET_INTERCEPT (Alg. 4 lines 22-28).
+
+        Re-anchor the intercept from a directly measured clock offset
+        ``diff`` (this process minus reference) observed at adjusted local
+        time ``diff_timestamp``: solve ``slope*t + i = diff`` at
+        ``t = diff_timestamp``.
+        """
+        return LinearModel(self.slope, self.slope * (-diff_timestamp) + diff)
+
+    @staticmethod
+    def merge(lm_mid: "LinearModel", lm_child: "LinearModel") -> "LinearModel":
+        """MERGE_LMS (Alg. 4 lines 29-31).
+
+        ``lm_mid`` is the model of process M relative to reference R (a
+        function of M's local time); ``lm_child`` is the model of process C
+        relative to M (a function of C's local time). Returns C's model
+        relative to R. This is the *exact* composition::
+
+            d_CR(t_C) = d_CM(t_C) + s_MR*(t_C - d_CM(t_C)) + i_MR
+
+        giving ``slope = s1 + s2 - s1*s2`` and ``intercept = i1 + i2 - s1*i2``
+        (with 1 = mid, 2 = child), matching the pseudocode of MERGE_LMS.
+        (The prose derivation in Eq. (1) of the paper parameterizes by the
+        reference's time instead; the two agree to first order in the slopes,
+        and the pseudocode form used here is exact for the learned model
+        orientation — verified by ``tests/test_clock_sync.py``.)
+        """
+        s1, i1 = lm_mid.slope, lm_mid.intercept
+        s2, i2 = lm_child.slope, lm_child.intercept
+        return LinearModel(s1 + s2 - s1 * s2, i1 + i2 - s1 * i2)
+
+
+IDENTITY_MODEL = LinearModel(0.0, 0.0)
+
+
+def linear_fit(x: np.ndarray, y: np.ndarray) -> LinearModel:
+    """Least-squares LINEAR_FIT used by JK and HCA (Alg. 4 line 20).
+
+    Centered formulation for numerical stability with large time values.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    if x.size < 2:
+        return LinearModel(0.0, float(y.mean()) if y.size else 0.0)
+    xm = x.mean()
+    ym = y.mean()
+    dx = x - xm
+    denom = float(np.dot(dx, dx))
+    if denom == 0.0:
+        return LinearModel(0.0, float(ym))
+    slope = float(np.dot(dx, y - ym) / denom)
+    intercept = float(ym - slope * xm)
+    return LinearModel(slope, intercept)

@@ -1,0 +1,154 @@
+"""Reproducible experimental design and analysis (§6.1, Algorithms 5-6).
+
+The paper's central methodological result: *the launcher invocation is an
+experimental factor* (§5.2). A sound benchmark therefore
+
+  1. runs ``n`` independent **launch epochs** (mpirun calls / process
+     restarts / fresh jit compilations) — replication over the blocking
+     factor,
+  2. measures ``nrep`` observations per (function, message size) inside
+     each epoch,
+  3. **randomizes** the order of test cases within an epoch (Montgomery's
+     randomization principle; Alg. 5 line 9 ``shuffle``),
+  4. removes outliers per group with Tukey's filter (Alg. 6 line 5),
+  5. summarizes each epoch by its mean *and* median, producing a
+     *distribution of averages* over epochs for the hypothesis test.
+
+The design is engine-agnostic: an *epoch factory* builds a fresh context
+(a new :class:`~repro.core.simnet.SimNet`, or a fresh jit cache on a real
+pod) and a *measure* callable produces the raw sample.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable
+
+import numpy as np
+
+from .stats import tukey_filter
+
+__all__ = [
+    "TestCase",
+    "ExperimentDesign",
+    "MeasurementRecord",
+    "EpochSummary",
+    "ResultTable",
+    "run_design",
+    "analyze_records",
+]
+
+
+@dataclass(frozen=True)
+class TestCase:
+    """One benchmark cell: an operation at a message size (Alg. 5's
+    ``(func, msize)``; the process count is fixed per campaign)."""
+
+    op: str
+    msize: int
+
+    def key(self) -> tuple[str, int]:
+        return (self.op, self.msize)
+
+
+@dataclass
+class ExperimentDesign:
+    n_launch_epochs: int = 30     # paper default: 30 mpiruns (§6)
+    nrep: int = 100               # measurements per case per epoch
+    shuffle: bool = True          # randomization (Alg. 5 line 9)
+    outlier_filter: bool = True   # Tukey per group (Alg. 6 line 5)
+    seed: int = 0
+
+
+@dataclass
+class MeasurementRecord:
+    case: TestCase
+    epoch: int
+    times: np.ndarray             # raw run-times [s]
+    invalid_fraction: float = 0.0
+    meta: dict = field(default_factory=dict)
+
+
+@dataclass
+class EpochSummary:
+    """Per-epoch averages after outlier removal (one row of Alg. 6's v)."""
+
+    case: TestCase
+    epoch: int
+    mean: float
+    median: float
+    n_kept: int
+    n_raw: int
+
+
+@dataclass
+class ResultTable:
+    """Distribution of per-epoch averages for every test case."""
+
+    summaries: list[EpochSummary]
+
+    def cases(self) -> list[TestCase]:
+        seen: dict[tuple, TestCase] = {}
+        for s in self.summaries:
+            seen.setdefault(s.case.key(), s.case)
+        return [seen[k] for k in sorted(seen)]
+
+    def medians(self, case: TestCase) -> np.ndarray:
+        return np.array([s.median for s in self.summaries if s.case.key() == case.key()])
+
+    def means(self, case: TestCase) -> np.ndarray:
+        return np.array([s.mean for s in self.summaries if s.case.key() == case.key()])
+
+    def to_rows(self) -> list[dict]:
+        return [
+            dict(op=s.case.op, msize=s.case.msize, epoch=s.epoch,
+                 mean=s.mean, median=s.median, n_kept=s.n_kept, n_raw=s.n_raw)
+            for s in self.summaries
+        ]
+
+
+def run_design(
+    design: ExperimentDesign,
+    epoch_factory: Callable[[int], Any],
+    measure: Callable[[Any, TestCase, int], np.ndarray],
+    cases: Iterable[TestCase],
+) -> list[MeasurementRecord]:
+    """Algorithm 5: ``n`` launch epochs, each measuring all cases in a
+    freshly shuffled order."""
+    cases = list(cases)
+    rng = np.random.default_rng(design.seed)
+    records: list[MeasurementRecord] = []
+    for epoch in range(design.n_launch_epochs):
+        ctx = epoch_factory(epoch)
+        order = list(cases)
+        if design.shuffle:
+            perm = rng.permutation(len(order))
+            order = [order[i] for i in perm]
+        for case in order:
+            times = np.asarray(measure(ctx, case, design.nrep), dtype=np.float64)
+            records.append(MeasurementRecord(case=case, epoch=epoch, times=times))
+    return records
+
+
+def analyze_records(
+    records: Iterable[MeasurementRecord],
+    outlier_filter: bool = True,
+) -> ResultTable:
+    """Algorithm 6: per (case, epoch) Tukey-filter then mean & median."""
+    summaries: list[EpochSummary] = []
+    for rec in records:
+        raw = rec.times
+        kept = tukey_filter(raw) if outlier_filter else raw
+        if kept.size == 0:
+            kept = raw
+        summaries.append(
+            EpochSummary(
+                case=rec.case,
+                epoch=rec.epoch,
+                mean=float(np.mean(kept)),
+                median=float(np.median(kept)),
+                n_kept=int(kept.size),
+                n_raw=int(raw.size),
+            )
+        )
+    return ResultTable(summaries=summaries)

@@ -1,0 +1,98 @@
+"""Experimental-factor registry (§5.9, Table 4).
+
+"Knowing all factors is a tedious, but necessary task" (Le Boudec, quoted in
+§5). The paper's Table 4 lists the factors every MPI benchmark result must
+carry; this module defines the TPU/JAX analogue and attaches it to every
+result record. Two results are only *comparable* when their factor sets
+differ solely in the declared factor under test — enforced by
+:func:`assert_comparable`.
+
+| paper factor          | TPU/JAX analogue captured here                  |
+|-----------------------|-------------------------------------------------|
+| MPI implementation    | jax / jaxlib version, backend, library config   |
+| network               | device kind, mesh shape & axis names            |
+| synchronization method| sync algorithm + window size                    |
+| mpirun                | launch-epoch count and epoch isolation mode     |
+| compiler / flags      | XLA_FLAGS, jit options (donate, remat policy)   |
+| DVFS level            | device clock class (fixed on TPU; recorded)     |
+| cache                 | buffer reuse policy (warm/cold; donation)       |
+| pinning               | host process binding / device->host mapping     |
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import platform
+from dataclasses import asdict, dataclass, field
+
+__all__ = ["FactorSet", "capture_factors", "assert_comparable"]
+
+
+@dataclass(frozen=True)
+class FactorSet:
+    backend: str = "cpu"
+    device_kind: str = "cpu"
+    jax_version: str = ""
+    mesh_shape: tuple = ()
+    mesh_axes: tuple = ()
+    sync_method: str = "barrier"
+    window_size_us: float = 0.0
+    n_launch_epochs: int = 1
+    nrep: int = 0
+    epoch_isolation: str = "process"   # process | clear_caches | none
+    xla_flags: str = ""
+    matmul_precision: str = "default"
+    donate_buffers: bool = False
+    remat_policy: str = "none"
+    buffer_policy: str = "warm"        # warm | cold (cache factor, §5.8)
+    dtype: str = "float32"
+    host: str = field(default_factory=platform.node)
+    extra: tuple = ()
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    def fingerprint(self, exclude: tuple[str, ...] = ()) -> str:
+        d = {k: v for k, v in self.to_dict().items() if k not in exclude and k != "host"}
+        blob = json.dumps(d, sort_keys=True, default=str)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def capture_factors(**overrides) -> FactorSet:
+    """Capture the ambient environment into a :class:`FactorSet`."""
+    try:
+        import jax
+
+        backend = jax.default_backend()
+        device_kind = jax.devices()[0].device_kind
+        jax_version = jax.__version__
+    except Exception:  # pragma: no cover - jax always present in this repo
+        backend, device_kind, jax_version = "unknown", "unknown", "unknown"
+    base = dict(
+        backend=backend,
+        device_kind=device_kind,
+        jax_version=jax_version,
+        xla_flags=os.environ.get("XLA_FLAGS", ""),
+    )
+    base.update(overrides)
+    return FactorSet(**base)
+
+
+def assert_comparable(a: FactorSet, b: FactorSet, factor_under_test: tuple[str, ...]) -> None:
+    """Refuse to statistically compare results whose factor sets differ in
+    anything but the declared factor(s) under test (§5.9's conclusion)."""
+    fa = a.fingerprint(exclude=factor_under_test)
+    fb = b.fingerprint(exclude=factor_under_test)
+    if fa != fb:
+        da, db = a.to_dict(), b.to_dict()
+        diffs = {
+            k: (da[k], db[k])
+            for k in da
+            if k not in factor_under_test and k != "host" and da[k] != db[k]
+        }
+        raise ValueError(
+            "factor sets differ beyond the factor under test "
+            f"{factor_under_test}: {diffs} — results are not comparable"
+        )

@@ -1,0 +1,133 @@
+"""Simulated collective-operation cost models (§3.2, §5.1).
+
+The measurement experiments need a distributed operation to time. On a real
+pod the object under test is a jitted JAX collective or step function (see
+:mod:`repro.core.runtime_meter`); in the simulation it is a cost model with
+the statistical structure the paper reports:
+
+  * non-normal, right-skewed run-time distributions with a *second smaller
+    peak* on the right (bimodal, Fig. 14),
+  * occasional OS-noise spikes (long tail),
+  * per-rank finish imbalance (what makes ``max end - min start`` differ
+    from ``max local``),
+  * lag-1 autocorrelation between consecutive measurements (Fig. 18),
+  * a per-launch-epoch bias: distinct mpiruns/launch epochs have different
+    means (§5.2, Figs. 16-17) — modeled as a small multiplicative factor
+    drawn once per :class:`~repro.core.simnet.SimNet` instance.
+
+The default constants give a few tens of microseconds for small messages at
+p = 16, matching Table 1 / Fig. 14 magnitudes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .simnet import SimNet
+
+__all__ = ["SimCollective", "CollectiveExecution", "OP_LIBRARY", "make_op"]
+
+
+@dataclass
+class CollectiveExecution:
+    """Per-rank true start/finish times of one simulated collective call."""
+
+    start_true: np.ndarray
+    end_true: np.ndarray
+
+
+@dataclass
+class SimCollective:
+    """Cost model ``T(p, m) = alpha * ceil(log2 p) + beta * m + gamma``.
+
+    ``epoch_bias`` models the launch-epoch factor (§5.2): a per-process-
+    instantiation multiplicative offset, sampled once per (net, op) pair.
+    """
+
+    name: str = "allreduce"
+    alpha: float = 3.0e-6        # per tree level [s]
+    beta: float = 2.5e-10        # per byte [s] (~4 GB/s effective)
+    gamma: float = 2.0e-6        # fixed overhead [s]
+    msize_factor: float = 1.0    # e.g. 2x for allreduce (reduce+bcast phases)
+    noise_sigma: float = 0.04    # lognormal sigma on the common duration
+    tail_prob: float = 0.08      # bimodal right peak probability (Fig. 14)
+    tail_shift: float = 0.35     # right peak at ~(1+shift) * mean
+    spike_prob: float = 0.003    # OS-noise spike
+    spike_scale: float = 8.0
+    rank_imbalance: float = 0.06 # per-rank finish spread (fraction of T)
+    autocorr: float = 0.35       # AR(1) coefficient between consecutive calls
+    epoch_bias_sigma: float = 0.02  # per-launch-epoch mean shift (§5.2)
+    warm_cache_discount: float = 0.12  # §5.8: warm buffers run faster
+    _ar_state: float = field(default=0.0, init=False, repr=False)
+    _epoch_bias: dict = field(default_factory=dict, init=False, repr=False)
+
+    def base_time(self, p: int, msize: int) -> float:
+        levels = max(1, int(np.ceil(np.log2(max(2, p)))))
+        return self.alpha * levels + self.beta * self.msize_factor * msize + self.gamma
+
+    def _bias_for(self, net: SimNet) -> float:
+        key = id(net)
+        if key not in self._epoch_bias:
+            rng = np.random.default_rng(net.rng.integers(2**31))
+            self._epoch_bias[key] = float(
+                np.exp(rng.normal(0.0, self.epoch_bias_sigma))
+            )
+        return self._epoch_bias[key]
+
+    def sample_duration(self, net: SimNet, p: int, msize: int,
+                        warm: bool = True) -> float:
+        """Common (synchronized-start) duration of one call."""
+        t0 = self.base_time(p, msize) * self._bias_for(net)
+        if not warm:
+            t0 *= 1.0 + self.warm_cache_discount
+        rng = net.rng
+        # AR(1) lognormal noise (Fig. 18's autocorrelation).
+        eps = float(rng.normal(0.0, self.noise_sigma))
+        self._ar_state = self.autocorr * self._ar_state + eps
+        t = t0 * float(np.exp(self._ar_state))
+        if rng.random() < self.tail_prob:
+            t *= 1.0 + self.tail_shift * float(rng.uniform(0.7, 1.3))
+        if rng.random() < self.spike_prob:
+            t *= self.spike_scale
+        return t
+
+    def execute(self, net: SimNet, msize: int, ranks: list[int] | None = None,
+                warm: bool = True) -> CollectiveExecution:
+        """Run one collective call on the simulated cluster.
+
+        Semantics of a synchronizing collective: no rank can finish before
+        every rank has entered the call, so skewed entries inflate early
+        entrants' *local* durations (§4.6 / Fig. 11's mechanism).
+        """
+        ranks = list(range(net.p)) if ranks is None else ranks
+        p = len(ranks)
+        start = net.t[ranks].copy()
+        t_all_in = float(np.max(start))
+        dur = self.sample_duration(net, p, msize, warm)
+        imb = net.rng.normal(0.0, self.rank_imbalance, size=p)
+        # one randomly-chosen "late" rank pattern per call
+        end = t_all_in + dur * np.maximum(0.25, 1.0 + imb)
+        for i, r in enumerate(ranks):
+            net.t[r] = end[i]
+        return CollectiveExecution(start_true=start, end_true=end)
+
+
+def make_op(name: str, **overrides) -> SimCollective:
+    """Factory for the collectives studied in the paper."""
+    presets = {
+        # msize_factor approximates the algorithmic volume multiplier.
+        "bcast":     dict(msize_factor=1.0, alpha=2.5e-6),
+        "allreduce": dict(msize_factor=2.0, alpha=3.0e-6),
+        "alltoall":  dict(msize_factor=4.0, alpha=4.0e-6, rank_imbalance=0.10),
+        "scan":      dict(msize_factor=2.0, alpha=3.5e-6, tail_prob=0.12),
+        "reduce":    dict(msize_factor=1.0, alpha=2.5e-6),
+        "barrier":   dict(msize_factor=0.0, alpha=2.0e-6, gamma=1.0e-6),
+    }
+    kw = dict(presets.get(name, {}))
+    kw.update(overrides)
+    return SimCollective(name=name, **kw)
+
+
+OP_LIBRARY = tuple(sorted(["bcast", "allreduce", "alltoall", "scan", "reduce", "barrier"]))

@@ -1,0 +1,96 @@
+"""Measuring *real* jitted JAX computations with the paper's method (§6).
+
+This is the deployment path of the methodology: the object under test is a
+compiled XLA executable (a collective, a ``train_step``, a ``serve_step``)
+rather than the simulator's cost model. The same experimental design
+applies:
+
+  * a **launch epoch** = a fresh executable. ``epoch_isolation``:
+      - ``"clear_caches"``: ``jax.clear_caches()`` + re-trace per epoch
+        (in-process analogue of a fresh mpirun; captures compilation/layout
+        nondeterminism),
+      - ``"none"``: same executable reused (isolates pure run-time noise).
+    On a real multi-host pod, epochs are separate launcher invocations and
+    this module is driven once per process by ``launch/train.py``.
+  * ``nrep`` timed calls per case, each fenced by ``block_until_ready``
+    (the device-level "barrier"; host timestamps around a fenced dispatch
+    are the §3.2.1 local-times scheme),
+  * Tukey filtering + per-epoch averages downstream, via
+    :mod:`repro.core.design`.
+"""
+
+from __future__ import annotations
+
+import gc
+import time
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import numpy as np
+
+__all__ = ["timed_calls", "JaxEpochContext", "make_jax_measure", "MeterConfig"]
+
+
+def timed_calls(fn: Callable[[], Any], nrep: int, warmup: int = 3) -> np.ndarray:
+    """Time ``nrep`` calls of a nullary ``fn`` whose result supports
+    ``block_until_ready`` (or is a pytree of such)."""
+    import jax
+
+    def _block(x):
+        return jax.block_until_ready(x)
+
+    for _ in range(warmup):
+        _block(fn())
+    out = np.empty(nrep)
+    for i in range(nrep):
+        t0 = time.perf_counter_ns()
+        _block(fn())
+        out[i] = (time.perf_counter_ns() - t0) * 1e-9
+    return out
+
+
+@dataclass
+class MeterConfig:
+    warmup: int = 3
+    epoch_isolation: str = "clear_caches"   # or "none"
+    cold_buffers: bool = False               # §5.8 cache factor: fresh inputs per call
+
+
+class JaxEpochContext:
+    """Per-epoch context: builds (and owns) freshly-jitted callables."""
+
+    def __init__(self, build: Callable[[int], dict[str, Callable[[], Any]]],
+                 epoch: int, config: MeterConfig):
+        self.epoch = epoch
+        self.config = config
+        if config.epoch_isolation == "clear_caches":
+            import jax
+
+            jax.clear_caches()
+            gc.collect()
+        self.callables = build(epoch)
+
+    def measure(self, name: str, nrep: int) -> np.ndarray:
+        fn = self.callables[name]
+        return timed_calls(fn, nrep, warmup=self.config.warmup)
+
+
+def make_jax_measure(build: Callable[[int], dict[str, Callable[[], Any]]],
+                     config: MeterConfig | None = None):
+    """Adapters for :func:`repro.core.design.run_design`.
+
+    ``build(epoch)`` returns a dict mapping case names (``op@msize``) to
+    nullary jitted callables. Returns ``(epoch_factory, measure)``.
+    """
+    cfg = config or MeterConfig()
+
+    def epoch_factory(epoch: int) -> JaxEpochContext:
+        return JaxEpochContext(build, epoch, cfg)
+
+    def measure(ctx: JaxEpochContext, case, nrep: int) -> np.ndarray:
+        name = f"{case.op}@{case.msize}"
+        if name not in ctx.callables and case.op in ctx.callables:
+            name = case.op
+        return ctx.measure(name, nrep)
+
+    return epoch_factory, measure

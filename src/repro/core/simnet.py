@@ -1,0 +1,271 @@
+"""Discrete-event simulation of a cluster's host control plane (§3, §4).
+
+The paper's clock-synchronization algorithms run over MPI point-to-point
+messages between *hosts*. On a TPU pod the same algorithms run over the host
+control plane (gRPC/ICI-host network); on this CPU-only CI they run against
+this simulator, which models:
+
+  * per-host hardware clocks (offset + skew + optional random walk),
+    see :mod:`repro.core.clocks`,
+  * a host network with lognormal one-way latency noise and occasional
+    OS-noise spikes (the heavy right tail seen in Fig. 32 of the paper),
+  * per-host "program counter" timelines so hierarchical rounds of pairwise
+    exchanges execute concurrently, like real MPI ranks (this is what makes
+    the sync-duration Pareto analysis of Fig. 10 meaningful).
+
+All quantities are in seconds of *true* simulated time. Hosts never see true
+time: every algorithm only reads local clocks via :meth:`SimNet.local_time`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .clocks import SimClock
+
+__all__ = ["NetParams", "ClockParams", "SimNet", "PingPongSample"]
+
+
+@dataclass
+class NetParams:
+    """Host-network latency model.
+
+    Defaults are calibrated to the paper's InfiniBand clusters (RTT of a
+    small message ~10-40 us, Fig. 32-33) which is also representative of a
+    TPU-pod host fabric.
+    """
+
+    one_way: float = 8e-6           # base one-way latency [s]
+    jitter_sigma: float = 0.25      # lognormal sigma on one-way latency
+    spike_prob: float = 2e-3        # probability of an OS-noise spike
+    spike_scale: float = 25.0       # spike multiplies the one-way latency
+    proc_overhead: float = 3e-7     # local per-message processing [s]
+
+
+@dataclass
+class ClockParams:
+    """Distribution of per-host clock imperfections.
+
+    ``skew_sigma=5e-6`` reproduces the magnitude of Fig. 3: two hosts drift
+    apart by several hundred microseconds over 50 s.
+    """
+
+    offset_spread: float = 5e-3     # initial offsets ~ U(-spread, +spread) [s]
+    skew_sigma: float = 5e-6        # relative frequency error ~ N(0, sigma)
+    rw_sigma: float = 0.0           # oscillator random walk [s / sqrt(s)]
+    freq_est_sigma: float = 0.0     # frequency-estimation error (§4.2.1); set
+                                    # ~4.3e-6 to model Netgauge's HRT_CALIBRATE
+
+
+@dataclass
+class PingPongSample:
+    """Timestamps of one ping-pong exchange (client -> server -> client)."""
+
+    t_send_client: float   # client local clock when the ping was sent
+    t_server: float        # server local clock when it stamped the reply
+    t_recv_client: float   # client local clock when the reply arrived
+
+
+class SimNet:
+    """A simulated cluster of ``p`` hosts with clocks and a lossless network."""
+
+    def __init__(
+        self,
+        p: int,
+        net: NetParams | None = None,
+        clocks: ClockParams | None = None,
+        seed: int = 0,
+    ) -> None:
+        self.p = int(p)
+        self.net = net or NetParams()
+        self.clock_params = clocks or ClockParams()
+        self.rng = np.random.default_rng(seed)
+        cp = self.clock_params
+        self.clocks = [
+            SimClock(
+                offset=float(self.rng.uniform(-cp.offset_spread, cp.offset_spread)),
+                skew=float(self.rng.normal(0.0, cp.skew_sigma)),
+                rw_sigma=cp.rw_sigma,
+                scale_error=float(self.rng.normal(0.0, cp.freq_est_sigma)) if cp.freq_est_sigma else 0.0,
+                seed=int(self.rng.integers(0, 2**31 - 1)),
+            )
+            for _ in range(self.p)
+        ]
+        # Per-host true-time program counters.
+        self.t = np.zeros(self.p, dtype=np.float64)
+        self.msg_count = 0
+
+    # ------------------------------------------------------------------ time
+    def local_time(self, r: int) -> float:
+        """Read host ``r``'s hardware clock (what GET_TIME returns)."""
+        return self.clocks[r].read(self.t[r])
+
+    def true_time(self, r: int) -> float:
+        """Simulator-only ground truth; never exposed to algorithms."""
+        return float(self.t[r])
+
+    def true_time_at_local(self, r: int, local: float) -> float:
+        """Invert host ``r``'s clock (simulator bookkeeping for waits)."""
+        c = self.clocks[r]
+        raw = local / (1.0 + c.scale_error)
+        return (raw - c.offset - c._rw_x) / (1.0 + c.skew)
+
+    def advance(self, r: int, dt: float) -> None:
+        """Host ``r`` computes locally for ``dt`` true seconds."""
+        self.t[r] += max(0.0, dt)
+
+    def wait_until_local(self, r: int, local_deadline: float) -> bool:
+        """Busy-wait host ``r`` until its local clock shows ``local_deadline``.
+
+        Returns ``False`` if the deadline already passed (the window-based
+        scheme's START_LATE error).
+        """
+        target = self.true_time_at_local(r, local_deadline)
+        if target <= self.t[r]:
+            return False
+        self.t[r] = target
+        return True
+
+    def sleep_all(self, dt: float) -> None:
+        """All hosts idle for ``dt`` true seconds (used between probes)."""
+        self.t += dt
+
+    # --------------------------------------------------------------- network
+    def _latency(self) -> float:
+        lat = self.net.one_way * float(self.rng.lognormal(0.0, self.net.jitter_sigma))
+        if self.rng.random() < self.net.spike_prob:
+            lat *= self.net.spike_scale
+        return lat
+
+    def transfer(self, src: int, dst: int) -> None:
+        """One-way message; advances both hosts' timelines appropriately.
+
+        The receiver is assumed to be blocked in a receive: delivery happens
+        at ``max(t_dst, t_src + latency)``.
+        """
+        self.msg_count += 1
+        send_done = self.t[src] + self.net.proc_overhead
+        self.t[src] = send_done
+        arrival = max(self.t[dst], send_done + self._latency())
+        self.t[dst] = arrival + self.net.proc_overhead
+
+    def pingpong(self, client: int, server: int) -> PingPongSample:
+        """One client->server->client exchange with local timestamps.
+
+        This is the primitive underlying SKAMPI_PINGPONG (Alg. 7),
+        COMPUTE_OFFSET (Alg. 12), COMPUTE_RTT (Alg. 17) and the fitpoint
+        collection of JK / LEARN_MODEL_HCA (Algs. 15 / 4).
+        """
+        t_send_client = self.local_time(client)
+        self.transfer(client, server)
+        t_server = self.local_time(server)
+        self.transfer(server, client)
+        t_recv_client = self.local_time(client)
+        return PingPongSample(t_send_client, t_server, t_recv_client)
+
+    def _latencies(self, n: int) -> np.ndarray:
+        lat = self.net.one_way * self.rng.lognormal(0.0, self.net.jitter_sigma, size=n)
+        spikes = self.rng.random(n) < self.net.spike_prob
+        lat[spikes] *= self.net.spike_scale
+        return lat
+
+    def pingpong_batch(self, client: int, server: int, n: int):
+        """Vectorized sequence of ``n`` ping-pong exchanges.
+
+        Semantically identical to ``n`` calls of :meth:`pingpong` (the server
+        sits in a receive loop after the first delivery), but samples all
+        latencies at once so the large fitpoint sweeps of JK/HCA (up to
+        ``N_FITPTS x N_EXCHANGES`` exchanges per pair) stay tractable in the
+        discrete-event simulation.
+
+        Returns local-clock arrays ``(t_send_client, t_server, t_recv_client)``.
+        """
+        if n <= 0:
+            return (np.empty(0), np.empty(0), np.empty(0))
+        oh = self.net.proc_overhead
+        lat1 = self._latencies(n)
+        lat2 = self._latencies(n)
+        # True-time recurrence: send_i = recv_{i-1} + oh ; srv_i = send_i +
+        # lat1_i + oh ; recv_i = srv_i + lat2_i + oh. Only the first delivery
+        # needs the max() against the server's availability.
+        send = np.empty(n)
+        srv = np.empty(n)
+        recv = np.empty(n)
+        send[0] = self.t[client] + oh
+        srv[0] = max(self.t[server], send[0] + lat1[0]) + oh
+        recv[0] = srv[0] + lat2[0] + oh
+        if n > 1:
+            # Per-exchange duration after the pipeline is primed.
+            d = 3 * oh + lat1[1:] + lat2[1:]
+            recv[1:] = recv[0] + np.cumsum(d)
+            send[1:] = recv[:-1] + oh
+            srv[1:] = send[1:] + lat1[1:] + oh
+        self.t[client] = recv[-1]
+        self.t[server] = srv[-1]
+        self.msg_count += 2 * n
+        c = self.clocks[client]
+        s = self.clocks[server]
+        to_local = lambda clk, t: (clk.offset + (1.0 + clk.skew) * t) * (1.0 + clk.scale_error)
+        return (to_local(c, send), to_local(s, srv), to_local(c, recv))
+
+    # -------------------------------------------------------------- barriers
+    def dissemination_barrier(self, ranks: list[int] | None = None) -> np.ndarray:
+        """Framework-owned dissemination barrier (cf. §4.6 / Taubenfeld [20]).
+
+        ``ceil(log2 p)`` rounds; in round ``k`` rank ``i`` signals rank
+        ``(i + 2^k) mod p`` and proceeds once it heard from
+        ``(i - 2^k) mod p``. Returns the per-rank *true* exit times
+        (simulator-side; experiments read clocks separately).
+        """
+        ranks = list(range(self.p)) if ranks is None else ranks
+        n = len(ranks)
+        idx = {r: i for i, r in enumerate(ranks)}
+        k = 1
+        while k < n:
+            send_time = {r: self.t[r] + self.net.proc_overhead for r in ranks}
+            for r in ranks:
+                src = ranks[(idx[r] - k) % n]
+                arrival = send_time[src] + self._latency()
+                self.t[r] = max(self.t[r] + self.net.proc_overhead, arrival)
+                self.msg_count += 1
+            k *= 2
+        return self.t[ranks].copy()
+
+    def library_barrier(self, exit_skew: float = 0.0, ranks: list[int] | None = None) -> np.ndarray:
+        """An opaque library barrier with configurable *exit skew* (§4.6).
+
+        Models implementations like the MVAPICH 2.0a barrier of Fig. 12 where
+        ranks leave the barrier up to ~40 us apart, linearly in rank. With
+        ``exit_skew=0`` it behaves like the dissemination barrier.
+        """
+        ranks = list(range(self.p)) if ranks is None else ranks
+        out = self.dissemination_barrier(ranks)
+        if exit_skew > 0.0:
+            n = len(ranks)
+            for i, r in enumerate(ranks):
+                bias = exit_skew * i / max(1, n - 1)
+                bias += float(self.rng.normal(0.0, 0.05 * exit_skew))
+                self.t[r] += max(0.0, bias)
+        return self.t[ranks].copy()
+
+    # ------------------------------------------------------------- utilities
+    def elapsed_snapshot(self) -> np.ndarray:
+        return self.t.copy()
+
+    def max_elapsed_since(self, snap: np.ndarray) -> float:
+        """Wall-clock duration of a phase = max over hosts (Fig. 10 x-axis)."""
+        return float(np.max(self.t - snap))
+
+    def align(self, ranks: list[int] | None = None) -> None:
+        """Bring hosts to a common true time (models a blocking sync point)."""
+        ranks = list(range(self.p)) if ranks is None else ranks
+        tmax = float(np.max(self.t[ranks]))
+        for r in ranks:
+            self.t[r] = tmax
+
+    def true_offset(self, r: int, ref: int = 0) -> float:
+        """Ground-truth clock offset of ``r`` vs ``ref`` at the current moment."""
+        t = max(self.t[r], self.t[ref])
+        return self.clocks[r].read(t) - self.clocks[ref].read(t)

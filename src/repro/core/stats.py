@@ -1,0 +1,282 @@
+"""Statistical machinery for sound MPI/collective benchmarking (§3.5, §5-6).
+
+Self-contained (numpy-only) implementations of everything the paper's
+method needs, so the framework has no SciPy dependency on cluster hosts:
+
+  * Tukey's outlier filter (§3.5),
+  * Wilcoxon rank-sum / Mann-Whitney test with tie correction and one- or
+    two-sided alternatives (§6.2) — the paper's test of choice because MPI
+    run-times are *not* normally distributed (§5.1),
+  * confidence intervals for the mean (normal and small-sample t),
+  * normality diagnostics (Jarque-Bera; the paper uses Kolmogorov-Smirnov /
+    Shapiro-Wilk — JB plays the same gatekeeper role for the t-test),
+  * autocorrelation function with significance bounds (§5.3, Fig. 18),
+  * significance stars for p-values as printed in Figs. 28/30.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = [
+    "tukey_filter",
+    "tukey_fences",
+    "normal_ppf",
+    "t_ppf",
+    "mean_confidence_interval",
+    "RankSumResult",
+    "wilcoxon_rank_sum",
+    "significance_stars",
+    "jarque_bera",
+    "autocorrelation",
+    "autocorr_significant_lags",
+    "coefficient_of_variation",
+]
+
+
+# ---------------------------------------------------------------------------
+# Outlier handling (§3.5)
+# ---------------------------------------------------------------------------
+
+def tukey_fences(x: np.ndarray, k: float = 1.5) -> tuple[float, float]:
+    """``(Q1 - k*IQR, Q3 + k*IQR)`` fences of Tukey's filter."""
+    x = np.asarray(x, dtype=np.float64)
+    q1, q3 = np.percentile(x, [25.0, 75.0])
+    iqr = q3 - q1
+    return float(q1 - k * iqr), float(q3 + k * iqr)
+
+
+def tukey_filter(x: np.ndarray, k: float = 1.5) -> np.ndarray:
+    """Remove observations outside the Tukey fences (paper §3.5).
+
+    Robust against OS-noise spikes and unknown warm-up length without the
+    implicit bias of min-taking benchmarks (Table 2 discussion).
+    """
+    x = np.asarray(x, dtype=np.float64)
+    if x.size < 4:
+        return x
+    lo, hi = tukey_fences(x, k)
+    return x[(x >= lo) & (x <= hi)]
+
+
+# ---------------------------------------------------------------------------
+# Quantiles (numpy-only inverse normal / t)
+# ---------------------------------------------------------------------------
+
+def normal_ppf(q: float) -> float:
+    """Inverse standard-normal CDF (Acklam's rational approximation,
+    |rel err| < 1.15e-9)."""
+    if not 0.0 < q < 1.0:
+        raise ValueError(f"q must be in (0,1), got {q}")
+    a = [-3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
+         1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00]
+    b = [-5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
+         6.680131188771972e+01, -1.328068155288572e+01]
+    c = [-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
+         -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00]
+    d = [7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
+         3.754408661907416e+00]
+    plow, phigh = 0.02425, 1 - 0.02425
+    if q < plow:
+        u = math.sqrt(-2 * math.log(q))
+        return (((((c[0] * u + c[1]) * u + c[2]) * u + c[3]) * u + c[4]) * u + c[5]) / \
+               ((((d[0] * u + d[1]) * u + d[2]) * u + d[3]) * u + 1)
+    if q > phigh:
+        u = math.sqrt(-2 * math.log(1 - q))
+        return -(((((c[0] * u + c[1]) * u + c[2]) * u + c[3]) * u + c[4]) * u + c[5]) / \
+               ((((d[0] * u + d[1]) * u + d[2]) * u + d[3]) * u + 1)
+    u = q - 0.5
+    r = u * u
+    return (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]) * u / \
+           (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1)
+
+
+def t_ppf(q: float, df: int) -> float:
+    """Student-t quantile via the Cornish-Fisher expansion in the normal
+    quantile (Hill 1970 style); adequate for CI construction (df >= 3)."""
+    if df <= 0:
+        raise ValueError("df must be positive")
+    z = normal_ppf(q)
+    g1 = (z**3 + z) / 4.0
+    g2 = (5 * z**5 + 16 * z**3 + 3 * z) / 96.0
+    g3 = (3 * z**7 + 19 * z**5 + 17 * z**3 - 15 * z) / 384.0
+    g4 = (79 * z**9 + 776 * z**7 + 1482 * z**5 - 1920 * z**3 - 945 * z) / 92160.0
+    return z + g1 / df + g2 / df**2 + g3 / df**3 + g4 / df**4
+
+
+def mean_confidence_interval(x: np.ndarray, level: float = 0.95) -> tuple[float, float, float]:
+    """``(mean, lo, hi)`` CI of the sample mean.
+
+    Valid when the sample mean is ~normal — per §5.1 (Fig. 15), this needs
+    a sample size of >= ~30 for MPI run-time distributions.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    n = x.size
+    m = float(np.mean(x))
+    if n < 2:
+        return m, m, m
+    se = float(np.std(x, ddof=1) / math.sqrt(n))
+    q = 0.5 + level / 2.0
+    crit = t_ppf(q, n - 1) if n <= 60 else normal_ppf(q)
+    return m, m - crit * se, m + crit * se
+
+
+# ---------------------------------------------------------------------------
+# Wilcoxon rank-sum (Mann-Whitney) test (§6.2)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RankSumResult:
+    statistic: float       # Mann-Whitney U of sample A
+    z: float               # normal-approximation z score
+    p_value: float
+    alternative: str
+    n_a: int
+    n_b: int
+
+    @property
+    def significant(self) -> bool:
+        return self.p_value <= 0.05
+
+    @property
+    def stars(self) -> str:
+        return significance_stars(self.p_value)
+
+
+def _rank_with_ties(values: np.ndarray) -> tuple[np.ndarray, float]:
+    """Midranks plus the tie-correction term ``sum(t^3 - t)``."""
+    order = np.argsort(values, kind="mergesort")
+    ranks = np.empty(values.size, dtype=np.float64)
+    sorted_vals = values[order]
+    tie_term = 0.0
+    i = 0
+    while i < values.size:
+        j = i
+        while j + 1 < values.size and sorted_vals[j + 1] == sorted_vals[i]:
+            j += 1
+        avg_rank = 0.5 * (i + j) + 1.0
+        ranks[order[i:j + 1]] = avg_rank
+        t = j - i + 1
+        if t > 1:
+            tie_term += t**3 - t
+        i = j + 1
+    return ranks, tie_term
+
+
+def wilcoxon_rank_sum(a: np.ndarray, b: np.ndarray,
+                      alternative: str = "two-sided") -> RankSumResult:
+    """WILCOXON TEST of the paper (§6.2): nonparametric comparison of two
+    independent samples (e.g. the 30 per-mpirun medians of two MPI
+    libraries, Fig. 28).
+
+    ``alternative='less'`` tests H_a: A < B (the "is library X faster?"
+    question of Fig. 30); ``'greater'`` the reverse. Normal approximation
+    with tie correction and continuity correction — appropriate for the
+    paper's regime (n >= ~10 per side).
+    """
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    n1, n2 = a.size, b.size
+    if n1 == 0 or n2 == 0:
+        raise ValueError("empty sample")
+    combined = np.concatenate([a, b])
+    ranks, tie_term = _rank_with_ties(combined)
+    r1 = float(np.sum(ranks[:n1]))
+    u1 = r1 - n1 * (n1 + 1) / 2.0   # Mann-Whitney U of sample A
+    mu = n1 * n2 / 2.0
+    n = n1 + n2
+    sigma2 = n1 * n2 / 12.0 * ((n + 1) - tie_term / (n * (n - 1)))
+    sigma = math.sqrt(max(sigma2, 1e-300))
+
+    def z_of(u: float, shift: float) -> float:
+        return (u - mu + shift) / sigma
+
+    if alternative == "two-sided":
+        z = z_of(u1, -0.5 * math.copysign(1.0, u1 - mu))
+        p = 2.0 * 0.5 * math.erfc(abs(z) / math.sqrt(2.0))
+        p = min(1.0, p)
+    elif alternative == "less":
+        # small U1 (A ranked low -> A smaller) is evidence for A < B
+        z = z_of(u1, +0.5)
+        p = 0.5 * math.erfc(-z / math.sqrt(2.0))  # P(Z <= z)
+    elif alternative == "greater":
+        z = z_of(u1, -0.5)
+        p = 0.5 * math.erfc(z / math.sqrt(2.0))   # P(Z >= z)
+    else:
+        raise ValueError(f"unknown alternative {alternative!r}")
+    return RankSumResult(statistic=u1, z=z, p_value=float(p),
+                         alternative=alternative, n_a=n1, n_b=n2)
+
+
+def significance_stars(p: float) -> str:
+    """The paper's asterisk notation: *** p<=0.001, ** p<=0.01, * p<=0.05."""
+    if p <= 0.001:
+        return "***"
+    if p <= 0.01:
+        return "**"
+    if p <= 0.05:
+        return "*"
+    return ""
+
+
+# ---------------------------------------------------------------------------
+# Normality & independence diagnostics (§5.1, §5.3)
+# ---------------------------------------------------------------------------
+
+def jarque_bera(x: np.ndarray) -> tuple[float, float]:
+    """Jarque-Bera normality test -> ``(statistic, p_value)``.
+
+    Plays the role of the paper's KS/Shapiro-Wilk gate before a t-test
+    (§6.2): the JB statistic is asymptotically chi-square(2), whose survival
+    function is ``exp(-x/2)`` — no special functions needed.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    n = x.size
+    if n < 8:
+        return 0.0, 1.0
+    m = x.mean()
+    d = x - m
+    s2 = float(np.mean(d**2))
+    if s2 <= 0:
+        return 0.0, 1.0
+    skew = float(np.mean(d**3)) / s2**1.5
+    kurt = float(np.mean(d**4)) / s2**2
+    jb = n / 6.0 * (skew**2 + 0.25 * (kurt - 3.0) ** 2)
+    return jb, float(math.exp(-jb / 2.0))
+
+
+def autocorrelation(x: np.ndarray, max_lag: int = 50) -> np.ndarray:
+    """ACF coefficients ``C_h / C_0`` for lags 0..max_lag (§5.3)."""
+    x = np.asarray(x, dtype=np.float64)
+    n = x.size
+    max_lag = min(max_lag, n - 1)
+    d = x - x.mean()
+    c0 = float(np.dot(d, d)) / n
+    if c0 <= 0:
+        return np.zeros(max_lag + 1)
+    acf = np.empty(max_lag + 1)
+    for h in range(max_lag + 1):
+        acf[h] = float(np.dot(d[: n - h], d[h:])) / n / c0
+    return acf
+
+
+def autocorr_significant_lags(x: np.ndarray, max_lag: int = 50) -> np.ndarray:
+    """Lags (>=1) whose ACF exceeds the 95% significance bound 1.96/sqrt(n).
+
+    Empty result => measurements can be treated as independent; otherwise
+    the paper suggests sub-sampling (§5.3, Fig. 18b).
+    """
+    x = np.asarray(x, dtype=np.float64)
+    acf = autocorrelation(x, max_lag)
+    bound = 1.96 / math.sqrt(max(1, x.size))
+    lags = np.arange(1, acf.size)
+    return lags[np.abs(acf[1:]) > bound]
+
+
+def coefficient_of_variation(x: np.ndarray) -> float:
+    x = np.asarray(x, dtype=np.float64)
+    m = float(np.mean(x))
+    return float(np.std(x, ddof=1) / m) if x.size > 1 and m != 0 else 0.0

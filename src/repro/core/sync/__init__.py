@@ -1,0 +1,49 @@
+"""Clock-synchronization algorithms studied and introduced by the paper (§4)."""
+
+from .base import (
+    ClockSync,
+    SyncResult,
+    compute_rtt,
+    probe_offsets,
+    skampi_pingpong_adjusted,
+    true_offsets,
+)
+from .hca import HCASync, learn_model_hca
+from .jk import JKSync, collect_fitpoint
+from .netgauge import NetgaugeSync, compute_offset_minrtt
+from .skampi import SkampiSync
+
+__all__ = [
+    "ClockSync",
+    "SyncResult",
+    "compute_rtt",
+    "probe_offsets",
+    "skampi_pingpong_adjusted",
+    "true_offsets",
+    "HCASync",
+    "JKSync",
+    "NetgaugeSync",
+    "SkampiSync",
+    "learn_model_hca",
+    "collect_fitpoint",
+    "compute_offset_minrtt",
+    "ALGORITHMS",
+    "make_sync",
+]
+
+ALGORITHMS = ("skampi", "netgauge", "jk", "hca", "hca2")
+
+
+def make_sync(name: str, **kw) -> ClockSync:
+    """Factory by paper name."""
+    if name == "skampi":
+        return SkampiSync(**kw)
+    if name == "netgauge":
+        return NetgaugeSync(**kw)
+    if name == "jk":
+        return JKSync(**kw)
+    if name == "hca":
+        return HCASync(hierarchical_intercepts=False, **kw)
+    if name == "hca2":
+        return HCASync(hierarchical_intercepts=True, **kw)
+    raise ValueError(f"unknown sync algorithm {name!r}; known: {ALGORITHMS}")

@@ -1,0 +1,89 @@
+"""Jones & Koenig clock synchronization (§4.3, Algorithms 15-17) [19].
+
+Learns a *linear model of the clock drift* of every rank relative to the
+root by linear regression over ``N_FITPTS`` fitpoints, each the median of
+``N_EXCHANGES`` ping-pong offset measurements corrected by ``rtt/2``.
+
+The fitpoint loops are interleaved across ranks exactly as in Alg. 15
+(``for idx: for r: for i:``), which is what gives every rank's regression a
+time base spanning the whole O(p * N_FITPTS * N_EXCHANGES * RTT)
+synchronization phase — the source of JK's accuracy *and* of its cost
+(Fig. 10: the most precise clocks, but ~30s to synchronize).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..clocks import LinearModel, linear_fit
+from ..simnet import SimNet
+from .base import ClockSync, SyncResult, compute_rtt
+
+__all__ = ["JKSync", "collect_fitpoint"]
+
+
+def collect_fitpoint(
+    net: SimNet,
+    client: int,
+    ref: int,
+    rtt: float,
+    n_exchanges: int,
+    init_client: float = 0.0,
+    init_ref: float = 0.0,
+) -> tuple[float, float]:
+    """One fitpoint: median offset over ``n_exchanges`` ping-pongs
+    (Alg. 15 lines 11-20 / Alg. 4 lines 10-19).
+
+    Returns ``(xfit, yfit)`` where ``yfit`` is the median of
+    ``local_time - tremote - rtt/2`` (client clock minus reference clock)
+    and ``xfit`` the client local time at which that median was observed.
+    """
+    send, srv, recv = net.pingpong_batch(client, ref, n_exchanges)
+    local_times = recv - init_client
+    diffs = local_times - (srv - init_ref) - rtt / 2.0
+    order = np.argsort(diffs)
+    mid = order[len(order) // 2]  # the paper selects the element == median
+    return float(local_times[mid]), float(diffs[mid])
+
+
+class JKSync(ClockSync):
+    name = "jk"
+
+    def __init__(self, n_fitpts: int = 100, n_exchanges: int = 30):
+        self.n_fitpts = n_fitpts
+        self.n_exchanges = n_exchanges
+
+    def synchronize(self, net: SimNet, ranks: list[int] | None = None) -> SyncResult:
+        ranks = list(range(net.p)) if ranks is None else ranks
+        root = ranks[0]
+        others = [r for r in ranks if r != root]
+        net.align(ranks)
+        snap = net.elapsed_snapshot()
+        msgs0 = net.msg_count
+
+        # Alg. 15 lines 24-27: RTT of every pair first.
+        rtts = {r: compute_rtt(net, root, r) for r in others}
+
+        xs = {r: np.empty(self.n_fitpts) for r in others}
+        ys = {r: np.empty(self.n_fitpts) for r in others}
+        # Interleaved fitpoint collection (root serves ranks round-robin).
+        for idx in range(self.n_fitpts):
+            for r in others:
+                x, y = collect_fitpoint(net, r, root, rtts[r], self.n_exchanges)
+                xs[r][idx] = x
+                ys[r][idx] = y
+
+        models = [LinearModel(0.0, 0.0) for _ in range(net.p)]
+        for r in others:
+            models[r] = linear_fit(xs[r], ys[r])
+
+        net.align(ranks)
+        duration = net.max_elapsed_since(snap)
+        return SyncResult(
+            algorithm=self.name,
+            models=models,
+            initial_times=[0.0] * net.p,
+            duration=duration,
+            n_messages=net.msg_count - msgs0,
+            params={"n_fitpts": self.n_fitpts, "n_exchanges": self.n_exchanges},
+        )

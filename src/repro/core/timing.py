@@ -1,0 +1,120 @@
+"""MPI-style timing procedures (§3.2, Algorithm 1) and barrier probes (§4.6).
+
+Two ways to compute the completion time of a distributed operation:
+
+  * **Local times** (§3.2.1, used with barrier sync):
+    ``t[i] = max_r (end_local_r[i] - start_local_r[i])`` — no global clock
+    needed, but silently *includes barrier exit skew* in the measurement.
+  * **Global times** (§3.2.2, used with window sync or drift-corrected
+    clocks): ``t[i] = max_r g(end_r[i]) - min_r g(start_r[i])`` — the true
+    completion time of the operation, requires synchronized clocks.
+
+Figure 11's surprising gap between the two is reproduced by
+:func:`run_barrier_timed` returning *both* quantities, and Fig. 12's barrier
+exit-skew probe by :func:`probe_barrier_skew`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .mpi_ops import SimCollective
+from .simnet import SimNet
+from .sync.base import SyncResult
+
+__all__ = ["BarrierRun", "run_barrier_timed", "probe_barrier_skew"]
+
+
+@dataclass
+class BarrierRun:
+    """Measurements of ``nrep`` operation calls under barrier sync."""
+
+    times_local: np.ndarray   # max_r (end_r - start_r), scheme of §3.2.1
+    times_global: np.ndarray  # max_r g(end_r) - min_r g(start_r), §3.2.2
+    barrier_exit_true: np.ndarray  # (nrep, p) true exit times (skew study)
+    start_true: np.ndarray
+    end_true: np.ndarray
+
+
+def run_barrier_timed(
+    net: SimNet,
+    op: SimCollective,
+    msize: int,
+    nrep: int,
+    sync: SyncResult | None = None,
+    barrier_exit_skew: float = 0.0,
+    use_library_barrier: bool = True,
+    ranks: list[int] | None = None,
+) -> BarrierRun:
+    """Algorithm 1 with SYNC_PROCESSES = MPI_Barrier.
+
+    ``sync`` (optional) provides globally-synchronized clocks so the *same*
+    run can report both the local-max and the global completion time — the
+    §4.6 experiment design. ``barrier_exit_skew`` models implementations
+    whose barrier releases ranks far apart (Fig. 12: >40 us for MVAPICH).
+    """
+    ranks = list(range(net.p)) if ranks is None else ranks
+    p = len(ranks)
+    tl = np.empty(nrep)
+    tg = np.full(nrep, np.nan)
+    bx = np.empty((nrep, p))
+    st = np.empty((nrep, p))
+    et = np.empty((nrep, p))
+
+    for obs in range(nrep):
+        if use_library_barrier:
+            exit_true = net.library_barrier(exit_skew=barrier_exit_skew, ranks=ranks)
+        else:
+            exit_true = net.dissemination_barrier(ranks=ranks)
+        bx[obs] = exit_true
+        start_local = np.array([net.local_time(r) for r in ranks])
+        start_true = net.t[ranks].copy()
+        ex = op.execute(net, msize, ranks)
+        end_local = np.array([net.local_time(r) for r in ranks])
+        st[obs] = start_true
+        et[obs] = ex.end_true
+        tl[obs] = float(np.max(end_local - start_local))
+        if sync is not None:
+            g_start = [
+                sync.global_time(net, r, net.clocks[r].read(start_true[i]))
+                for i, r in enumerate(ranks)
+            ]
+            g_end = [
+                sync.global_time(net, r, net.clocks[r].read(ex.end_true[i]))
+                for i, r in enumerate(ranks)
+            ]
+            tg[obs] = float(np.max(g_end) - np.min(g_start))
+
+    return BarrierRun(
+        times_local=tl, times_global=tg,
+        barrier_exit_true=bx, start_true=st, end_true=et,
+    )
+
+
+def probe_barrier_skew(
+    net: SimNet,
+    nrep: int = 1000,
+    barrier_exit_skew: float = 0.0,
+    use_library_barrier: bool = True,
+    ranks: list[int] | None = None,
+) -> np.ndarray:
+    """Fig. 12 experiment: per-rank barrier exit times relative to the first
+    rank that leaves, averaged over ``nrep`` barrier calls.
+
+    Returns shape ``(nrep, p)`` relative exit times in seconds; column means
+    reproduce the per-rank skew profile.
+    """
+    ranks = list(range(net.p)) if ranks is None else ranks
+    p = len(ranks)
+    out = np.empty((nrep, p))
+    for obs in range(nrep):
+        if use_library_barrier:
+            exit_true = net.library_barrier(exit_skew=barrier_exit_skew, ranks=ranks)
+        else:
+            exit_true = net.dissemination_barrier(ranks=ranks)
+        out[obs] = exit_true - np.min(exit_true)
+        # small idle gap between probes so barriers do not overlap
+        net.sleep_all(5e-6)
+    return out

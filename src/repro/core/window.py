@@ -1,0 +1,112 @@
+"""Window-based process synchronization (§3.3, scheme (4) of Fig. 1).
+
+Processes agree on a logical-global-clock *start time*; measurement ``i``
+begins at ``start_time + i * win_size``. Each rank converts the global
+deadline to its own local clock through its drift model (the inverse of
+GET_NORMALIZED_TIME) and busy-waits. Two error flags per measurement,
+exactly as SKaMPI/NBCBench record them (Algs. 9/13):
+
+  * ``START_LATE``    — the rank reached the sync point after the window
+    opened (its global-clock estimate was behind),
+  * ``TOOK_TOO_LONG`` — the operation did not finish within the window.
+
+Measurements with either flag set on any rank are *invalid* and discarded
+(Figs. 21-22 study the trade-off between window size and the fraction of
+discarded measurements).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .mpi_ops import SimCollective
+from .simnet import SimNet
+from .sync.base import SyncResult
+
+__all__ = ["WindowRun", "run_windowed"]
+
+START_LATE = 1
+TOOK_TOO_LONG = 2
+
+
+@dataclass
+class WindowRun:
+    """Raw output of a window-synchronized measurement campaign."""
+
+    times: np.ndarray          # global-clock run-times, shape (nrep,)
+    errors: np.ndarray         # per-obs error bitmask (max over ranks)
+    start_global_est: np.ndarray  # (nrep, p) estimated-global start stamps
+    end_global_est: np.ndarray    # (nrep, p)
+    start_true: np.ndarray     # (nrep, p) simulator ground truth
+    end_true: np.ndarray       # (nrep, p)
+
+    @property
+    def valid(self) -> np.ndarray:
+        return self.errors == 0
+
+    @property
+    def valid_times(self) -> np.ndarray:
+        return self.times[self.valid]
+
+    @property
+    def invalid_fraction(self) -> float:
+        return float(np.mean(~self.valid)) if self.times.size else 0.0
+
+
+def run_windowed(
+    net: SimNet,
+    sync: SyncResult,
+    op: SimCollective,
+    msize: int,
+    nrep: int,
+    win_size: float,
+    ranks: list[int] | None = None,
+) -> WindowRun:
+    """Measure ``nrep`` calls of ``op`` under window-based synchronization.
+
+    Completion time per observation follows §3.2.2 (global times):
+    ``max_r global(end_r) - min_r global(start_r)``.
+    """
+    ranks = list(range(net.p)) if ranks is None else ranks
+    p = len(ranks)
+
+    # Root picks a start time in the (global-clock) future and broadcasts it
+    # (Alg. 2 line 8). Give every rank a slack window to reach the loop.
+    g_now = max(sync.global_time(net, r) for r in ranks)
+    start_time = g_now + win_size
+
+    times = np.empty(nrep)
+    errors = np.zeros(nrep, dtype=np.int64)
+    sg = np.empty((nrep, p))
+    eg = np.empty((nrep, p))
+    st = np.empty((nrep, p))
+    et = np.empty((nrep, p))
+
+    for obs in range(nrep):
+        target = start_time + obs * win_size
+        err = 0
+        for i, r in enumerate(ranks):
+            deadline_local = sync.local_deadline(r, target)
+            on_time = net.wait_until_local(r, deadline_local)
+            if not on_time:
+                err |= START_LATE
+        ex = op.execute(net, msize, ranks)
+        st[obs] = ex.start_true
+        et[obs] = ex.end_true
+        for i, r in enumerate(ranks):
+            sg[obs, i] = sync.global_time(
+                net, r, net.clocks[r].read(ex.start_true[i]))
+            eg[obs, i] = sync.global_time(
+                net, r, net.clocks[r].read(ex.end_true[i]))
+            if eg[obs, i] > target + win_size:
+                err |= TOOK_TOO_LONG
+        times[obs] = float(np.max(eg[obs]) - np.min(sg[obs]))
+        errors[obs] = err
+
+    return WindowRun(
+        times=times, errors=errors,
+        start_global_est=sg, end_global_est=eg,
+        start_true=st, end_true=et,
+    )

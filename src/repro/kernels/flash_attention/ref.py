@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Semantics: grouped-query causal attention with optional sliding window,
+logit soft-capping, query-position offset (decode) and KV-length masking —
+the exact feature set the assigned architectures need (gemma-2/3 local:global
++ softcap, mixtral SWA, granite MQA).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["flash_attention_ref"]
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, logit_cap=0.0,
+                        q_offset=0, kv_len=None):
+    """q: (B, S, H, D); k/v: (B, T, Hkv, D). Returns (B, S, H, D)."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    scale = 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    if logit_cap and logit_cap > 0:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+    qpos = jnp.arange(s) + q_offset
+    kpos = jnp.arange(t)
+    mask = jnp.ones((s, t), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    if kv_len is not None:
+        mask &= kpos[None, :] < kv_len
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(q.dtype), v)
+    return out.reshape(b, s, h, d)

@@ -1,0 +1,65 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``flash_attention`` / ``ssd_scan`` accept model-layout tensors, handle
+padding to block multiples, choose interpret mode off-TPU, and fall back to
+the jnp reference for cases the kernels do not cover (traced windows under
+a scanned layer stack are supported via the window-as-input design; traced
+``q_offset``/``kv_len`` during decode fall back).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention.kernel import flash_attention_fwd
+from .flash_attention.ref import flash_attention_ref
+from .ssd_scan.kernel import ssd_scan_fwd
+from .ssd_scan.ref import ssd_chunked_ref
+
+__all__ = ["flash_attention", "ssd_scan"]
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, logit_cap=0.0,
+                    q_offset=0, kv_len=None, block_q=512, block_k=512,
+                    interpret=None):
+    """q: (B, S, H, D); k/v: (B, T, Hkv, D) — model layout. Returns like q."""
+    if not isinstance(q_offset, int) or (kv_len is not None and not isinstance(kv_len, int)):
+        # decode path with traced position: reference fallback
+        return flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   logit_cap=logit_cap, q_offset=q_offset,
+                                   kv_len=kv_len)
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    if s % bq or t % bk:
+        return flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   logit_cap=logit_cap, q_offset=q_offset,
+                                   kv_len=kv_len)
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    use_window = window is not None
+    win = None if window is None else jnp.asarray(window, jnp.int32)
+    out = flash_attention_fwd(
+        qt, kt, vt, win, causal=causal, logit_cap=logit_cap,
+        q_offset=q_offset, kv_len=kv_len, block_q=bq, block_k=bk,
+        interpret=_auto_interpret(interpret), use_window=use_window)
+    return jnp.transpose(out, (0, 2, 1, 3))
+
+
+def ssd_scan(x, dta, B, C, *, chunk=256, head_group=8, interpret=None):
+    """Chunked SSD scan; x: (b, s, h, p), dta: (b, s, h), B/C: (b, s, n)."""
+    b, s, h, p = x.shape
+    if s % min(chunk, s) or h % min(head_group, h):
+        y, _ = ssd_chunked_ref(x, dta, B, C, min(chunk, s))
+        return y
+    return ssd_scan_fwd(x, dta, B, C, chunk=chunk, head_group=head_group,
+                        interpret=_auto_interpret(interpret))

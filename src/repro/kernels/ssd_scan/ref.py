@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the Mamba-2 SSD chunked-scan kernel.
+
+Re-exports the model-side implementation (:func:`repro.models.ssm.ssd_chunked`)
+— the kernel must match the exact math the models lower.
+"""
+
+from repro.models.ssm import ssd_chunked as ssd_chunked_ref
+
+__all__ = ["ssd_chunked_ref"]

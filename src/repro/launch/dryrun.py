@@ -1,0 +1,245 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware (the two lines above MUST precede every other import — JAX locks
+the device count at first init).
+
+For every (architecture x input shape) cell this lowers + compiles the
+appropriate step (train / prefill / decode) on the production mesh
+(16x16 single pod and 2x16x16 multi-pod) with fully-abstract inputs
+(ShapeDtypeStruct; nothing allocated), prints ``memory_analysis()`` (fits?)
+and ``cost_analysis()`` (FLOPs/bytes for §Roofline), and appends the
+roofline record to a JSON results file.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] --out results.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, applicable_shapes, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import roofline_from_compiled
+from repro.launch.steps import (
+    abstract_cache,
+    abstract_train_state,
+    input_specs,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.parallel import ShardingConfig, batch_specs, cache_specs, param_specs
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def model_flops(cfg, shape) -> tuple[float, int]:
+    """(MODEL_FLOPS_global, N_params[active]) — 6*N*D train, 2*N*D inference."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens, n_active
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens, n_active
+    tokens = shape.global_batch * 1
+    return 2.0 * n_active * tokens, n_active
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               sharding_mode: str = "fsdp_tp", remat: bool = True,
+               donate: bool = True):
+    """Lower + compile one (arch x shape x mesh) cell; returns the report."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_desc = "x".join(str(s) for s in mesh.devices.shape)
+    chips = int(np.prod(mesh.devices.shape))
+    shcfg = ShardingConfig(mode=sharding_mode)
+
+    specs = input_specs(cfg, shape)
+    b_specs = batch_specs(mesh, specs)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        state = abstract_train_state(cfg)
+        p_specs = param_specs(state["params"], cfg, mesh, shcfg)
+        opt_specs = {
+            "m": p_specs, "v": p_specs, "count": P(),
+        }
+        in_shardings = ({"params": p_specs, "opt": opt_specs}, b_specs)
+        out_shardings = ({"params": p_specs, "opt": opt_specs}, None)
+        step = make_train_step(cfg, remat=remat)
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                          in_shardings,
+                                          is_leaf=lambda x: isinstance(x, P)),
+                out_shardings=(jax.tree.map(
+                    lambda s: NamedSharding(mesh, s), out_shardings[0],
+                    is_leaf=lambda x: isinstance(x, P)), None),
+                donate_argnums=(0,) if donate else (),
+            ).lower(state, specs)
+            compiled = lowered.compile()
+    elif shape.kind == "prefill":
+        params = abstract_train_state(cfg)["params"]
+        p_specs = param_specs(params, cfg, mesh, shcfg)
+        step = make_prefill_step(cfg, remat=remat)
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(jax.tree.map(
+                    lambda s: NamedSharding(mesh, s), p_specs,
+                    is_leaf=lambda x: isinstance(x, P)), jax.tree.map(
+                    lambda s: NamedSharding(mesh, s), b_specs,
+                    is_leaf=lambda x: isinstance(x, P))),
+            ).lower(params, specs)
+            compiled = lowered.compile()
+    else:  # decode
+        params = abstract_train_state(cfg)["params"]
+        p_specs = param_specs(params, cfg, mesh, shcfg)
+        cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        c_specs = cache_specs(cfg, mesh, cache, shcfg)
+        step = make_decode_step(cfg)
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(
+                    jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                                 is_leaf=lambda x: isinstance(x, P)),
+                    jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs,
+                                 is_leaf=lambda x: isinstance(x, P)),
+                    jax.tree.map(lambda s: NamedSharding(mesh, s), b_specs,
+                                 is_leaf=lambda x: isinstance(x, P)),
+                ),
+                donate_argnums=(1,) if donate else (),
+            ).lower(params, cache, specs)
+            compiled = lowered.compile()
+    dt = time.time() - t0
+
+    mf, n_active = model_flops(cfg, shape)
+    report = roofline_from_compiled(
+        compiled, arch=arch, shape=shape_name, mesh_desc=mesh_desc,
+        chips=chips, model_flops_global=mf, model_params=n_active,
+        compile_seconds=dt)
+    return report, compiled
+
+
+def run_cell(arch, shape_name, multi_pod, args):
+    from repro.models.tuning import tuning_tag
+
+    report, compiled = lower_cell(
+        arch, shape_name, multi_pod=multi_pod,
+        sharding_mode=args.sharding, remat=not args.no_remat,
+        donate=not args.no_donate)
+    d = report.to_dict()
+    d["tuning"] = tuning_tag()
+    mem = d["memory_per_device"]
+    print(f"[dryrun] {arch} x {shape_name} mesh={d['mesh']} "
+          f"compile={d['compile_seconds']:.1f}s")
+    print(f"  memory/device: args={mem.get('argument_bytes', 0)/2**30:.2f}GiB "
+          f"out={mem.get('output_bytes', 0)/2**30:.2f}GiB "
+          f"temp={mem.get('temp_bytes', 0)/2**30:.2f}GiB "
+          f"(HBM 16GiB)")
+    print(f"  flops/device={d['flops_per_device']:.3e} "
+          f"bytes/device={d['bytes_per_device']:.3e} "
+          f"coll_bytes/device={d['collective_bytes_per_device']:.3e}")
+    print(f"  roofline terms [s]: compute={d['t_compute']:.4f} "
+          f"memory={d['t_memory']:.4f} collective={d['t_collective']:.4f} "
+          f"-> bottleneck={d['bottleneck']}")
+    print(f"  MODEL_FLOPS={d['model_flops_global']:.3e} "
+          f"useful_ratio={d['useful_flops_ratio']:.3f} "
+          f"roofline_fraction={d['roofline_fraction']:.3f}")
+    print(f"  collectives: {d['collective_ops']}")
+    return d
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCHS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--sharding", default="fsdp_tp",
+                    choices=["tp", "fsdp_tp", "dp"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-donate", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tune", default=None,
+                    help="comma list of tuning knobs, e.g. "
+                         "'ce_chunk=8,attn_additive_mask=1'")
+    args = ap.parse_args()
+
+    if args.tune:
+        from repro.models.tuning import set_tuning
+
+        kw = {}
+        for item in args.tune.split(","):
+            k, v = item.split("=")
+            kw[k] = int(v) if v.isdigit() else v.lower() in ("true", "1", "yes")
+        set_tuning(**kw)
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape_name in applicable_shapes(get_config(arch)):
+                cells.append((arch, shape_name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    existing = {}
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for rec in json.load(f):
+                existing[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+    results = list(existing.values())
+
+    failures = []
+    for arch, shape_name in cells:
+        for mp in meshes:
+            mesh_desc = "2x16x16" if mp else "16x16"
+            if args.skip_existing and (arch, shape_name, mesh_desc) in existing:
+                print(f"[dryrun] skip cached {arch} x {shape_name} {mesh_desc}")
+                continue
+            try:
+                d = run_cell(arch, shape_name, mp, args)
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"])
+                           != (arch, shape_name, mesh_desc)]
+                results.append(d)
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((arch, shape_name, mesh_desc, repr(e)[:200]))
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    if failures:
+        print("\nFAILED CELLS:")
+        for f4 in failures:
+            print(" ", f4)
+        raise SystemExit(1)
+    print(f"\nALL {len(cells) * len(meshes)} CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches JAX device state — required because only ``dryrun.py`` may set
+``xla_force_host_platform_device_count``.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_local_mesh", "TPUV5E"]
+
+
+# Hardware constants used by the roofline analysis (TPU v5e targets).
+class TPUV5E:
+    PEAK_FLOPS_BF16 = 197e12        # per chip [FLOP/s]
+    HBM_BW = 819e9                  # per chip [B/s]
+    ICI_BW = 50e9                   # per link [B/s]
+    HBM_BYTES = 16 * 2**30          # per chip
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (2 pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int | None = None, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    n = jax.device_count()
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,207 @@
+"""Roofline-term extraction from compiled XLA artifacts (EXPERIMENTS.md §Roofline).
+
+Sources:
+  * ``compiled.cost_analysis()`` — HLO FLOPs and bytes accessed (per-device
+    program under SPMD partitioning; verified by calibration in
+    ``tests/test_dryrun_infra.py``),
+  * ``compiled.as_text()`` — optimized HLO, parsed for the operand bytes of
+    every ``all-reduce`` / ``all-gather`` / ``reduce-scatter`` /
+    ``all-to-all`` / ``collective-permute`` (+ their ``-start`` async forms).
+
+Terms (seconds, per-device program == per-step wall-clock lower bound):
+  compute    = flops_per_device / peak_flops
+  memory     = bytes_per_device / hbm_bw
+  collective = collective_bytes_per_device / ici_bw
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["CollectiveStats", "parse_collectives", "RooflineReport",
+           "roofline_from_compiled", "HW"]
+
+
+class HW:
+    """TPU v5e per-chip constants (targets; this container is CPU-only)."""
+
+    PEAK_FLOPS_BF16 = 197e12
+    HBM_BW = 819e9
+    ICI_BW = 50e9          # per link; 1 link engaged per collective hop (cons.)
+    HBM_BYTES = 16 * 2**30
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    ops: dict = field(default_factory=dict)        # op kind -> count
+    operand_bytes: dict = field(default_factory=dict)  # op kind -> bytes
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.operand_bytes.values())
+
+    @property
+    def total_ops(self) -> int:
+        return sum(self.ops.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective op in optimized HLO text."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+([a-z0-9-]+)(?:-start)?\(", stripped)
+        if not m:
+            continue
+        op = m.group(1)
+        if op.endswith("-start"):
+            op = op[: -len("-start")]
+        if op not in _COLLECTIVES:
+            continue
+        # operand shapes appear inside the call parens
+        call = stripped[m.end():]
+        shapes = _SHAPE_RE.findall(call)
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        stats.ops[op] = stats.ops.get(op, 0) + 1
+        stats.operand_bytes[op] = stats.operand_bytes.get(op, 0) + nbytes
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_ops: dict
+    collective_bytes_by_op: dict
+    memory_per_device: dict            # from memory_analysis
+    model_flops_global: float          # 6*N*D (train) or 2*N*D
+    model_params: int
+    compile_seconds: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / HW.PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HW.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / HW.ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_bound(self) -> float:
+        """Roofline step time: the dominant term (optimistic overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chips' peak the *useful* model FLOPs achieve at
+        the rooflined step time (the §Perf score)."""
+        denom = self.step_time_bound * self.chips * HW.PEAK_FLOPS_BF16
+        return self.model_flops_global / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "collective_ops": self.collective_ops,
+            "collective_bytes_by_op": self.collective_bytes_by_op,
+            "memory_per_device": self.memory_per_device,
+            "model_flops_global": self.model_flops_global,
+            "model_params": self.model_params,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "compile_seconds": self.compile_seconds,
+        }
+
+
+def roofline_from_compiled(compiled, *, arch: str, shape: str, mesh_desc: str,
+                           chips: int, model_flops_global: float,
+                           model_params: int,
+                           compile_seconds: float = 0.0) -> RooflineReport:
+    from .hlo_analysis import analyze_hlo
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    # cost_analysis counts while-loop bodies once; the HLO-text analyzer
+    # scales by known_trip_count (see hlo_analysis.py). Primary numbers come
+    # from the analyzer; cost_analysis is kept as a lower-bound cross-check.
+    hlo = analyze_hlo(compiled.as_text())
+    flops = float(max(hlo.flops, float(cost.get("flops", 0.0))))
+    nbytes = float(max(hlo.bytes_accessed, float(cost.get("bytes accessed", 0.0))))
+
+    class _S:  # adapt HloCost to the CollectiveStats duck type
+        total_bytes = hlo.collective_bytes
+        ops = hlo.collective_ops
+        operand_bytes = hlo.collective_bytes_by_op
+
+    stats = _S()
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(ma, "peak_memory_in_bytes", 0) or 0),
+        }
+    except Exception:
+        mem = {}
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_desc, chips=chips,
+        flops_per_device=flops, bytes_per_device=nbytes,
+        collective_bytes_per_device=float(stats.total_bytes),
+        collective_ops=dict(stats.ops),
+        collective_bytes_by_op=dict(stats.operand_bytes),
+        memory_per_device=mem,
+        model_flops_global=model_flops_global,
+        model_params=model_params,
+        compile_seconds=compile_seconds,
+    )

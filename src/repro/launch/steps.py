@@ -1,0 +1,134 @@
+"""Step functions (train / prefill / decode) and their abstract input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the step selected by the shape kind — weak-type-correct, shardable,
+and never allocated (the dry-run contract). ``abstract_state`` does the same
+for parameters/optimizer/cache pytrees via ``jax.eval_shape``.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.shapes import ShapeSpec
+from repro.models import (
+    ModelConfig,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+)
+from repro.optim import OptimizerConfig, adamw_update, init_opt_state
+
+__all__ = [
+    "TrainState", "make_train_step", "make_prefill_step", "make_decode_step",
+    "input_specs", "abstract_params", "abstract_train_state", "abstract_cache",
+]
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt: OptimizerConfig | None = None,
+                    remat: bool = True):
+    opt = opt or OptimizerConfig()
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        def lf(p):
+            loss, metrics = loss_fn(cfg, p, batch, remat=remat)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, state["opt"], opt)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, remat: bool = True):
+    """Full-sequence forward (the prefill cost driver); returns logits."""
+
+    def prefill_step(params, batch):
+        logits, _ = forward(cfg, params, batch["tokens"],
+                            embeds=batch.get("embeds"),
+                            memory=batch.get("memory"), remat=remat)
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, cache, batch):
+        logits, cache = decode_step(cfg, params, cache, batch["tokens"],
+                                    memory=batch.get("memory"))
+        return logits, cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct; nothing allocated)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract model inputs for one (arch x shape) cell."""
+    b = shape.global_batch
+    tok = jnp.int32
+    if shape.kind == "train":
+        s = shape.seq_len
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), tok),
+            "labels": jax.ShapeDtypeStruct((b, s), tok),
+        }
+        if cfg.frontend == "vision":
+            specs["embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.d_model), cfg.jdtype)
+        if cfg.frontend == "audio":
+            specs["memory"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.d_model), cfg.jdtype)
+        return specs
+    if shape.kind == "prefill":
+        s = shape.seq_len
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), tok)}
+        if cfg.frontend == "vision":
+            specs["embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.d_model), cfg.jdtype)
+        if cfg.frontend == "audio":
+            specs["memory"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.d_model), cfg.jdtype)
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    specs = {"tokens": jax.ShapeDtypeStruct((b, 1), tok)}
+    if cfg.frontend == "audio":
+        specs["memory"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), cfg.jdtype)
+    return specs
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def abstract_train_state(cfg: ModelConfig):
+    p = abstract_params(cfg)
+    opt = jax.eval_shape(init_opt_state, p)
+    return {"params": p, "opt": opt}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_len))

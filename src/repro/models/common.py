@@ -1,0 +1,309 @@
+"""Shared model components: configs, norms, rotary embeddings, init helpers.
+
+All models are pure-functional JAX: parameters are pytrees of arrays with a
+leading stacked-layer axis so the layer stack runs under ``jax.lax.scan``
+(keeps HLO size O(1) in depth — essential for the 512-device dry-run).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ModelConfig",
+    "rms_norm",
+    "rotary_embedding",
+    "apply_rope",
+    "softcap",
+    "activation_fn",
+    "dense_init",
+    "embed_init",
+    "cross_entropy_loss",
+    "with_layer_axis",
+]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One config dataclass covers every assigned architecture family; the
+    per-arch modules read only the fields relevant to their family."""
+
+    name: str = "model"
+    family: str = "dense"           # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 1000
+    head_dim: int | None = None     # default d_model // n_heads
+    # --- attention pattern -------------------------------------------------
+    window: int | None = None       # sliding-window size for local layers
+    global_every: int = 0           # 0: all layers global; k: layer i is
+                                    # global iff (i+1) % k == 0 (gemma3 5:1)
+    attn_softcap: float = 0.0       # attention logit soft-capping (gemma2)
+    final_softcap: float = 0.0      # final-logit soft-capping (gemma2)
+    rope_theta: float = 10000.0
+    act: str = "swiglu"             # swiglu | geglu
+    glu: bool = True                # gated FFN (3 matrices) vs plain MLP (2)
+    qk_norm: bool = False
+    # --- MoE ----------------------------------------------------------------
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_d_ff: int = 0               # routed-expert hidden size (deepseek)
+    first_dense_layers: int = 0     # deepseek: first layer(s) stay dense
+    # --- MLA (deepseek) ----------------------------------------------------
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    rope_head_dim: int = 64
+    # --- SSM / hybrid -------------------------------------------------------
+    ssm_state: int = 0
+    ssm_heads: int = 0              # mamba2 heads (d_inner // head_dim)
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    attn_every: int = 0             # hybrid: shared attn block every k layers
+    # --- embeddings / misc ---------------------------------------------------
+    tie_embeddings: bool = True
+    embed_scale: bool = False       # gemma multiplies embeddings by sqrt(D)
+    # --- encoder-decoder -----------------------------------------------------
+    n_encoder_layers: int = 0
+    cross_attention: bool = False
+    # --- modality frontend (stub) -------------------------------------------
+    frontend: str | None = None     # 'vision' | 'audio'
+    frontend_tokens: int = 0        # precomputed embedding positions per item
+    dtype: str = "bfloat16"
+
+    # --------------------------------------------------------------- helpers
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def is_global_layer(self, i: int) -> bool:
+        if self.global_every < 0:
+            return False          # all layers sliding-window (Mixtral SWA)
+        if self.global_every == 0 or self.window is None:
+            return True
+        return (i + 1) % self.global_every == 0
+
+    def global_flags(self) -> np.ndarray:
+        return np.array([self.is_global_layer(i) for i in range(self.n_layers)])
+
+    def scaled(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for MODEL_FLOPS = 6*N*D)."""
+        return int(_param_count(self))
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: shared + top-k routed)."""
+        return int(_param_count(self, active_only=True))
+
+
+def _ffn_params(cfg: ModelConfig, d_ff: int) -> int:
+    return (3 if cfg.glu else 2) * cfg.d_model * d_ff
+
+
+def _attn_params(cfg: ModelConfig) -> int:
+    if cfg.kv_lora_rank:  # MLA
+        d = cfg.d_model
+        r = cfg.kv_lora_rank
+        qr = cfg.q_lora_rank or d
+        nh, hd, rd = cfg.n_heads, cfg.hd, cfg.rope_head_dim
+        q = d * qr + qr * nh * (hd + rd)
+        kv = d * (r + rd) + r * nh * (hd + hd)
+        o = nh * hd * d
+        return q + kv + o
+    hd = cfg.hd
+    return cfg.d_model * hd * (cfg.n_heads + 2 * cfg.n_kv_heads) + cfg.n_heads * hd * cfg.d_model
+
+
+def _ssm_params(cfg: ModelConfig) -> int:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nh = cfg.ssm_heads or max(1, d_inner // cfg.ssm_head_dim)
+    # in_proj: z, x, B, C, dt ; out_proj
+    d_bc = 2 * cfg.ssm_state * nh if False else 2 * cfg.ssm_state
+    in_proj = cfg.d_model * (2 * d_inner + 2 * cfg.ssm_state + nh)
+    out_proj = d_inner * cfg.d_model
+    return in_proj + out_proj + d_inner  # + conv/bias-ish small terms
+
+
+def _param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    n = cfg.vocab_size * cfg.d_model  # embeddings (tied: counted once)
+    if not cfg.tie_embeddings:
+        n += cfg.vocab_size * cfg.d_model
+    per_layer = 0
+    if cfg.family in ("ssm",):
+        per_layer = _ssm_params(cfg)
+        n += cfg.n_layers * per_layer
+        return n
+    if cfg.family == "hybrid":
+        n += cfg.n_layers * _ssm_params(cfg)
+        n_attn = cfg.n_layers // max(1, cfg.attn_every)
+        n += _attn_params(cfg)  # ONE shared attention block (zamba2)
+        n += n_attn * 2 * cfg.d_model  # per-use norms
+        return n
+    layers = cfg.n_layers + cfg.n_encoder_layers
+    attn = _attn_params(cfg)
+    if cfg.n_experts:
+        d_ff_routed = cfg.moe_d_ff or cfg.d_ff
+        router = cfg.d_model * cfg.n_experts
+        shared = cfg.n_shared_experts * _ffn_params(cfg, d_ff_routed)
+        n_dense = cfg.first_dense_layers
+        n_moe = cfg.n_layers - n_dense
+        experts_total = cfg.n_experts * _ffn_params(cfg, d_ff_routed)
+        experts_active = cfg.moe_top_k * _ffn_params(cfg, d_ff_routed)
+        dense_ffn = _ffn_params(cfg, cfg.d_ff if not cfg.moe_d_ff else cfg.n_experts * 0 + cfg.d_ff)
+        n += n_dense * (attn + dense_ffn)
+        n += n_moe * (attn + router + shared + (experts_active if active_only else experts_total))
+        if cfg.cross_attention:
+            n += cfg.n_layers * attn
+        return n
+    ffn = _ffn_params(cfg, cfg.d_ff)
+    n += layers * (attn + ffn)
+    if cfg.cross_attention:
+        n += cfg.n_layers * attn  # decoder cross-attention blocks
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers
+# ---------------------------------------------------------------------------
+
+_HINT_SPECS = {
+    # activations (B, S, D): batch over the data axes
+    "btd": (("pod", "data"), None, None),
+    # logits (B, S, V): batch over data, vocab over model
+    "btv": (("pod", "data"), None, "model"),
+    # decode activations (B, 1, D)
+    "b1d": (("pod", "data"), None, None),
+    # MoE dispatch buffers (B, E, C, D): batch over data, experts over model
+    "becd": (("pod", "data"), "model", None, None),
+}
+
+
+def shard_hint(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """Best-effort activation sharding constraint.
+
+    GSPMD does not reliably propagate the batch sharding through scanned
+    layer stacks and the tied-embedding logit matmul (observed: full-batch
+    f32 logit buffers per device). These hints pin the canonical layout:
+    batch over ``("pod","data")``, vocab over ``"model"``. Outside a mesh
+    context (unit tests, single device) they are no-ops.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    full = _HINT_SPECS[kind]
+    for spec in (P(*full), P(("data",) if isinstance(full[0], tuple) else full[0],
+                            *full[1:])):
+        try:
+            return jax.lax.with_sharding_constraint(x, spec)
+        except Exception:
+            continue
+    return x
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    from .tuning import get_tuning
+
+    if get_tuning().norm_bf16_io and x.dtype == jnp.bfloat16:
+        # keep the (B, S, D) stream in bf16; f32 only inside the reduction
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                       keepdims=True)
+        scale = (jax.lax.rsqrt(var + eps)).astype(x.dtype)
+        return x * scale * (1.0 + gamma.astype(jnp.float32)).astype(x.dtype)
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def rotary_embedding(positions: jnp.ndarray, dim: int, theta: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for given positions; shapes (..., dim//2)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (np.log(theta) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def activation_fn(name: str):
+    if name in ("swiglu", "silu"):
+        return jax.nn.silu
+    if name in ("geglu", "gelu"):
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(f"unknown activation {name}")
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, in_axis: int = 0) -> jnp.ndarray:
+    fan_in = shape[in_axis]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jnp.ndarray:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def with_layer_axis(init_fn, n_layers: int, key):
+    """vmap an init over a leading stacked-layer axis."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Token-mean cross entropy; logits (..., V), labels (...).
+
+    Sharded-vocab-safe: never gathers along the vocab axis (which may be
+    sharded over the ``model`` mesh axis). The gold logit is extracted with
+    a fused one-hot reduction (partial-sum + all-reduce under GSPMD) instead
+    of ``take_along_axis`` (which would force a full vocab all-gather —
+    67 GB/device for gemma-scale vocabularies).
+    """
+    v = logits.shape[-1]
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = (logits - m).astype(jnp.float32)
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    onehot = (labels[..., None] == jnp.arange(v)[None, :]).astype(jnp.float32)
+    gold = jnp.sum(shifted * onehot, axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

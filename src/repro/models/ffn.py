@@ -1,0 +1,173 @@
+"""Feed-forward blocks: gated-linear-unit FFNs and Mixture-of-Experts.
+
+The MoE uses a scatter/gather dispatch with per-expert capacity (GShard
+style, capacity factor configurable): FLOP-faithful (expert compute is
+``2 * E * C * D * F`` batched matmuls = ``~cf * k * tokens`` worth of expert
+work) and shardable (experts over the ``model``/expert axis, tokens over
+``data``). Dropped tokens fall back to the residual path, as in Switch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, activation_fn, dense_init, shard_hint
+
+__all__ = ["init_ffn_params", "ffn_block", "init_moe_params", "moe_block"]
+
+
+def init_ffn_params(cfg: ModelConfig, key, d_ff: int | None = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.jdtype
+    p = {
+        "w_up": dense_init(ks[1], (cfg.d_model, d_ff), dt),
+        "w_down": dense_init(ks[2], (d_ff, cfg.d_model), dt),
+    }
+    if cfg.glu:
+        p["w_gate"] = dense_init(ks[0], (cfg.d_model, d_ff), dt)
+    return p
+
+
+def ffn_block(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    act = activation_fn(cfg.act)
+    if "w_gate" in p:
+        return (act(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return act(x @ p["w_up"]) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+def init_moe_params(cfg: ModelConfig, key) -> dict:
+    d_ff = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    dt = cfg.jdtype
+    p = {
+        "router": dense_init(ks[0], (cfg.d_model, e), jnp.float32),
+        "w_gate": dense_init(ks[1], (e, cfg.d_model, d_ff), dt, in_axis=1),
+        "w_up": dense_init(ks[2], (e, cfg.d_model, d_ff), dt, in_axis=1),
+        "w_down": dense_init(ks[3], (e, d_ff, cfg.d_model), dt, in_axis=1),
+    }
+    if cfg.n_shared_experts:
+        shared_ff = cfg.n_shared_experts * d_ff
+        sub = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(sub[0], (cfg.d_model, shared_ff), dt),
+            "w_up": dense_init(sub[1], (cfg.d_model, shared_ff), dt),
+            "w_down": dense_init(sub[2], (shared_ff, cfg.d_model), dt),
+        }
+    return p
+
+
+def moe_block(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k routed experts, capacity-based scatter dispatch.
+
+    x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    Two dispatch regimes (both FLOP-faithful: expert matmul work =
+    ``capacity_factor * k * tokens * D * F``):
+
+      * **grouped** (training/prefill, S > 64): each sequence is a dispatch
+        group — the scatter/gather and position cumsum stay *local to the
+        batch shard* under data parallelism, per-group capacity
+        ``cf * k * S / E`` (GShard-style groups == data shards);
+      * **global** (decode, S <= 64): all B tokens form one group with a
+        small (E, C, D) buffer; cross-shard scatter is a cheap collective
+        at decode sizes.
+
+    Dropped tokens (over capacity) fall back to the residual path (Switch).
+    aux_loss is the Switch/GShard load-balancing loss.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    act = activation_fn(cfg.act)
+
+    gate_logits = (x.astype(jnp.float32) @ p["router"])             # (B,S,E)
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                            # (B,S,k)
+    topw = topw / jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), 1e-9)
+
+    # Load-balancing auxiliary loss (Switch eq. 4).
+    density = jnp.mean(
+        jax.nn.one_hot(topi[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    density_proxy = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * density_proxy) * e
+
+    grouped = s > 64
+    if grouped:
+        capacity = max(int(np.ceil(cfg.capacity_factor * k * s / e)), 4)
+        flat_e = topi.reshape(b, s * k)                             # (B, S*k)
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)         # (B,S*k,E)
+        pos_all = jnp.cumsum(onehot, axis=1) - onehot               # exclusive
+        pos = jnp.take_along_axis(pos_all, flat_e[..., None], axis=2)[..., 0]
+        valid = pos < capacity
+        pos_c = jnp.where(valid, pos, capacity - 1)
+        src = jnp.repeat(x, k, axis=1)                              # (B,S*k,D)
+        src = jnp.where(valid[..., None], src, 0)
+        from .tuning import get_tuning
+        tune = get_tuning()
+        if tune.moe_vmap_dispatch:
+            # Batched scatter/gather: the scatter indices are per-sequence,
+            # so vmapping over B emits operand-batching-dims scatter/gather
+            # HLO that GSPMD partitions along the (data-sharded) batch dim —
+            # without this it falls back to a full-batch f32 all-reduce of
+            # the (B, S*k, D) buffers per layer (96 GiB/layer on mixtral).
+            def _scatter_one(src_1, fe_1, pc_1):
+                z = jnp.zeros((e, capacity, d), dtype=x.dtype)
+                return z.at[fe_1, pc_1].add(src_1, mode="drop")
+
+            buf = jax.vmap(_scatter_one)(src, flat_e, pos_c)
+        else:
+            bidx = jnp.broadcast_to(jnp.arange(b)[:, None], (b, s * k))
+            buf = jnp.zeros((b, e, capacity, d), dtype=x.dtype)
+            buf = buf.at[bidx, flat_e, pos_c].add(src, mode="drop")
+        buf = shard_hint(buf, "becd")
+        h = act(jnp.einsum("becd,edf->becf", buf, p["w_gate"])) * \
+            jnp.einsum("becd,edf->becf", buf, p["w_up"])
+        out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"])
+        if not tune.moe_defer_combine_psum:
+            out_buf = shard_hint(out_buf, "becd")
+        if tune.moe_vmap_dispatch:
+            gathered = jax.vmap(lambda ob, fe, pc: ob[fe, pc])(
+                out_buf, flat_e, pos_c)
+        else:
+            gathered = out_buf[bidx, flat_e, pos_c]                 # (B,S*k,D)
+        gathered = jnp.where(valid[..., None], gathered, 0)
+        out = jnp.sum(
+            gathered.reshape(b, s, k, d)
+            * topw[..., None].astype(gathered.dtype), axis=2)
+    else:
+        t = b * s
+        tokens = x.reshape(t, d)
+        capacity = max(int(np.ceil(cfg.capacity_factor * k * t / e)), 4)
+        flat_e = topi.reshape(t * k)
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+        pos_all = jnp.cumsum(onehot, axis=0) - onehot
+        pos = jnp.take_along_axis(pos_all, flat_e[:, None], axis=1)[:, 0]
+        valid = pos < capacity
+        pos_c = jnp.where(valid, pos, capacity - 1)
+        src = jnp.repeat(tokens, k, axis=0)
+        src = jnp.where(valid[:, None], src, 0)
+        buf = jnp.zeros((e, capacity, d), dtype=tokens.dtype)
+        buf = buf.at[flat_e, pos_c].add(src, mode="drop")
+        h = act(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * \
+            jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+        out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+        gathered = out_buf[flat_e, pos_c]
+        gathered = jnp.where(valid[:, None], gathered, 0)
+        out = jnp.sum(
+            gathered.reshape(t, k, d) * topw.reshape(t, k)[..., None]
+            .astype(gathered.dtype), axis=1).reshape(b, s, d).reshape(t, d)
+        out = out.reshape(b, s, d)
+    out = out.reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        out = out + (act(x @ sp["w_gate"]) * (x @ sp["w_up"])) @ sp["w_down"]
+
+    return out, aux

@@ -1,0 +1,483 @@
+"""Unified language-model definition covering all assigned architectures.
+
+A model is a sequence of homogeneous **segments**; each segment is a stack of
+identical blocks executed under ``jax.lax.scan`` (stacked-parameter layout,
+HLO size independent of depth). Segment kinds:
+
+  * ``dense``   — attention + GLU FFN (gemma/granite/pixtral/llama family),
+                  with optional local/global window alternation via per-layer
+                  flags (gemma-2: 1:1, gemma-3: 5:1) and logit soft-capping;
+  * ``moe``     — attention (GQA or MLA) + mixture-of-experts FFN
+                  (mixtral, deepseek-v2 incl. shared experts);
+  * ``ssm``     — Mamba-2 SSD blocks (mamba2);
+  * ``hybrid``  — Mamba-2 backbone with a single *shared* attention block
+                  applied every ``attn_every`` layers (zamba2) — the shared
+                  block's parameters live outside the scanned stack and its
+                  KV cache is allocated per *application*, not per layer;
+  * ``encoder`` — bidirectional attention blocks (seamless encoder);
+  * dense/moe decoders may carry **cross-attention** (seamless decoder).
+
+The public API is purely functional: ``init_params``, ``forward``,
+``init_cache``, ``prefill``, ``decode_step``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import (
+    attn_block,
+    attn_decode_step,
+    init_attn_params,
+    init_mla_params,
+    mla_block,
+    mla_decode_step,
+)
+from .common import ModelConfig, cross_entropy_loss, embed_init, rms_norm, shard_hint
+from .ffn import ffn_block, init_ffn_params, init_moe_params, moe_block
+from .ssm import init_ssm_cache, init_ssm_params, ssm_block, ssm_decode_step
+
+__all__ = [
+    "SegmentSpec", "segment_plan", "init_params", "forward", "encode",
+    "init_cache", "prefill", "decode_step", "loss_fn", "num_params",
+]
+
+
+# ---------------------------------------------------------------------------
+# Segment planning
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SegmentSpec:
+    kind: str                  # dense | moe | ssm | hybrid | encoder
+    count: int
+    d_ff: int = 0              # dense FFN width override (deepseek layer 0)
+    global_flags: tuple = ()   # per-layer: full-attention layer?
+    attn_flags: tuple = ()     # hybrid: apply shared attention after layer i?
+    cross: bool = False        # decoder cross-attention
+    inner: int = 0             # hybrid_super: ssm layers per shared-attn app
+
+
+def segment_plan(cfg: ModelConfig) -> list[SegmentSpec]:
+    if cfg.family in ("dense", "vlm"):
+        return [SegmentSpec("dense", cfg.n_layers,
+                            global_flags=tuple(cfg.global_flags()),
+                            cross=cfg.cross_attention)]
+    if cfg.family == "audio":  # encoder-decoder
+        return [SegmentSpec("dense", cfg.n_layers,
+                            global_flags=tuple(cfg.global_flags()),
+                            cross=True)]
+    if cfg.family == "moe":
+        segs = []
+        if cfg.first_dense_layers:
+            segs.append(SegmentSpec("dense", cfg.first_dense_layers,
+                                    d_ff=cfg.d_ff,
+                                    global_flags=tuple([True] * cfg.first_dense_layers)))
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+        segs.append(SegmentSpec("moe", n_moe,
+                                global_flags=tuple(cfg.global_flags()[cfg.first_dense_layers:])))
+        return segs
+    if cfg.family == "ssm":
+        return [SegmentSpec("ssm", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        k = max(1, cfg.attn_every)
+        n_super, tail = divmod(cfg.n_layers, k)
+        segs = [SegmentSpec("hybrid_super", n_super, inner=k)]
+        if tail:
+            segs.append(SegmentSpec("ssm", tail))
+        return segs
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def n_attn_apps(cfg: ModelConfig) -> int:
+    """Number of shared-attention applications in a hybrid stack."""
+    plan = segment_plan(cfg)
+    return sum(s.count for s in plan if s.kind == "hybrid_super")
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, spec: SegmentSpec, key) -> dict:
+    ks = jax.random.split(key, 8)
+    dt = cfg.jdtype
+    d = cfg.d_model
+    p: dict = {"norm1": jnp.zeros((d,), dt), "norm2": jnp.zeros((d,), dt)}
+    if spec.kind in ("dense", "moe"):
+        if cfg.kv_lora_rank:
+            p["attn"] = init_mla_params(cfg, ks[0])
+        else:
+            p["attn"] = init_attn_params(cfg, ks[0])
+        if spec.cross:
+            p["cross"] = init_attn_params(cfg, ks[1])
+            p["norm_cross"] = jnp.zeros((d,), dt)
+        if spec.kind == "dense":
+            p["ffn"] = init_ffn_params(cfg, ks[2], spec.d_ff or cfg.d_ff)
+        else:
+            p["moe"] = init_moe_params(cfg, ks[3])
+    elif spec.kind == "ssm":
+        p["ssm"] = init_ssm_params(cfg, ks[0])
+        del p["norm2"]
+    elif spec.kind == "hybrid_super":
+        # ``inner`` mamba layers (stacked) followed by one application of the
+        # shared attention (+FFN) block; norm2/norm3 gate the shared block.
+        def one(k):
+            return {"norm1": jnp.zeros((d,), dt), "ssm": init_ssm_params(cfg, k)}
+
+        p["inner"] = jax.vmap(one)(jax.random.split(ks[0], spec.inner))
+        del p["norm1"]
+        p["norm3"] = jnp.zeros((d,), dt)
+    else:
+        raise ValueError(spec.kind)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    plan = segment_plan(cfg)
+    keys = jax.random.split(key, len(plan) + 4)
+    params: dict = {
+        "embed": embed_init(keys[0], (cfg.vocab_size, cfg.d_model), cfg.jdtype),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.jdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(keys[1], (cfg.vocab_size, cfg.d_model), cfg.jdtype)
+    segs = []
+    for i, spec in enumerate(plan):
+        sk = jax.random.split(keys[2 + i], spec.count)
+        segs.append(jax.vmap(lambda k: _init_block(cfg, spec, k))(sk))
+    params["segments"] = segs
+    if cfg.family == "hybrid":
+        # Zamba2's single shared transformer block (attention + FFN),
+        # reused at every flagged layer.
+        params["shared_attn"] = init_attn_params(cfg, keys[-1])
+        if cfg.d_ff:
+            params["shared_ffn"] = init_ffn_params(
+                cfg, jax.random.fold_in(keys[-1], 1), cfg.d_ff)
+    if cfg.n_encoder_layers:
+        enc_spec = SegmentSpec("dense", cfg.n_encoder_layers,
+                               global_flags=tuple([True] * cfg.n_encoder_layers))
+        ek = jax.random.split(keys[-2], cfg.n_encoder_layers)
+        params["encoder"] = {
+            "segment": jax.vmap(lambda k: _init_block(cfg, enc_spec, k))(ek),
+            "final_norm": jnp.zeros((cfg.d_model,), cfg.jdtype),
+        }
+    return params
+
+
+def num_params(params) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(params)))
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_train(cfg: ModelConfig, spec: SegmentSpec, p: dict, x, flag,
+                 memory, shared_attn):
+    """One block body (runs under scan; ``flag`` is this layer's flag)."""
+    aux = jnp.float32(0.0)
+    if spec.kind in ("dense", "moe"):
+        h = rms_norm(x, p["norm1"])
+        if cfg.kv_lora_rank:
+            a = mla_block(cfg, p["attn"], h)
+        else:
+            a = attn_block(cfg, p["attn"], h, is_global=flag)
+        x = x + a
+        if spec.cross and memory is not None:
+            h = rms_norm(x, p["norm_cross"])
+            x = x + attn_block(cfg, p["cross"], h, kv=memory)
+        h = rms_norm(x, p["norm2"])
+        if spec.kind == "dense":
+            x = x + ffn_block(cfg, p["ffn"], h)
+        else:
+            out, aux = moe_block(cfg, p["moe"], h)
+            x = x + out
+    elif spec.kind == "ssm":
+        x = x + ssm_block(cfg, p["ssm"], rms_norm(x, p["norm1"]))
+    elif spec.kind == "hybrid_super":
+        for j in range(spec.inner):
+            pj = jax.tree.map(lambda a: a[j], p["inner"])
+            x = x + ssm_block(cfg, pj["ssm"], rms_norm(x, pj["norm1"]))
+        h = rms_norm(x, p["norm2"])
+        x = x + attn_block(cfg, shared_attn["attn"], h)
+        if "ffn" in shared_attn:
+            x = x + ffn_block(cfg, shared_attn["ffn"], rms_norm(x, p["norm3"]))
+    x = shard_hint(x, "btd")
+    return x, aux
+
+
+def _run_segment(cfg: ModelConfig, spec: SegmentSpec, seg_params, x,
+                 memory=None, shared_attn=None, remat: bool = True):
+    if spec.global_flags:
+        flags = jnp.asarray(spec.global_flags)
+    else:
+        flags = jnp.ones((spec.count,), bool)
+
+    def body(x, inp):
+        p, flag = inp
+        return _block_train(cfg, spec, p, x, flag, memory, shared_attn)
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, auxes = jax.lax.scan(body, x, (seg_params, flags))
+    return x, jnp.sum(auxes)
+
+
+def _embed_tokens(cfg: ModelConfig, params, tokens):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def encode(cfg: ModelConfig, params, frontend_embeds, remat: bool = True):
+    """Encoder stack over precomputed frontend embeddings (audio stub)."""
+    enc = params["encoder"]
+    spec = SegmentSpec("dense", cfg.n_encoder_layers,
+                       global_flags=tuple([True] * cfg.n_encoder_layers))
+    x = frontend_embeds.astype(cfg.jdtype)
+
+    def body(x, p):
+        h = rms_norm(x, p["norm1"])
+        x = x + attn_block(cfg, p["attn"], h, causal=False)
+        h = rms_norm(x, p["norm2"])
+        x = x + ffn_block(cfg, p["ffn"], h)
+        return x, jnp.float32(0.0)
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, enc["segment"])
+    return rms_norm(x, enc["final_norm"])
+
+
+def _backbone(cfg: ModelConfig, params, tokens, *, embeds=None, memory=None,
+              remat: bool = True):
+    """Embed -> segments -> final norm; returns (x_text, aux_loss)."""
+    x = _embed_tokens(cfg, params, tokens)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    x = shard_hint(x, "btd")
+    aux_total = jnp.float32(0.0)
+    shared = None
+    if "shared_attn" in params:
+        shared = {"attn": params["shared_attn"]}
+        if "shared_ffn" in params:
+            shared["ffn"] = params["shared_ffn"]
+    for spec, seg in zip(segment_plan(cfg), params["segments"]):
+        x, aux = _run_segment(cfg, spec, seg, x, memory=memory,
+                              shared_attn=shared, remat=remat)
+        aux_total = aux_total + aux
+    x = rms_norm(x, params["final_norm"])
+    if embeds is not None:
+        x = x[:, embeds.shape[1]:]  # only text positions produce logits
+    return x, aux_total
+
+
+def _head(cfg: ModelConfig, params, x):
+    unembed = params.get("unembed", params["embed"])
+    logits = shard_hint(x @ unembed.T.astype(x.dtype), "btv")
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def forward(cfg: ModelConfig, params, tokens, *, embeds=None, memory=None,
+            remat: bool = True):
+    """Full-sequence forward. Returns (logits, aux_loss).
+
+    ``embeds``: precomputed modality embeddings prepended to the token
+    embeddings (VLM patch embeddings). ``memory``: encoder output for
+    cross-attention (audio/enc-dec).
+    """
+    x, aux_total = _backbone(cfg, params, tokens, embeds=embeds,
+                             memory=memory, remat=remat)
+    return _head(cfg, params, x), aux_total
+
+
+def loss_fn(cfg: ModelConfig, params, batch, remat: bool = True):
+    from .tuning import get_tuning
+
+    nchunk = get_tuning().ce_chunk
+    s = batch["tokens"].shape[1]
+    if nchunk and s % nchunk == 0 and batch.get("mask") is None:
+        # Chunked head: never materializes the full (B, S, V) logits — the
+        # live f32 logit buffers shrink by n_chunks (§Perf iteration C1).
+        x, aux = _backbone(cfg, params, batch["tokens"],
+                           embeds=batch.get("embeds"),
+                           memory=batch.get("memory"), remat=remat)
+        b = x.shape[0]
+        c = s // nchunk
+        xs = jnp.moveaxis(x.reshape(b, nchunk, c, -1), 1, 0)
+        ls = jnp.moveaxis(batch["labels"].reshape(b, nchunk, c), 1, 0)
+
+        @jax.checkpoint
+        def chunk_loss(carry, inp):
+            xc, lc = inp
+            logits = _head(cfg, params, xc)
+            return carry + cross_entropy_loss(logits, lc) * lc.size, None
+
+        total, _ = jax.lax.scan(chunk_loss, jnp.float32(0.0), (xs, ls))
+        ce = total / (b * s)
+    else:
+        logits, aux = forward(
+            cfg, params, batch["tokens"],
+            embeds=batch.get("embeds"), memory=batch.get("memory"),
+            remat=remat)
+        ce = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init, prefill, decode
+# ---------------------------------------------------------------------------
+
+def _attn_cache_shapes(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.kv_lora_rank:
+        return {
+            "ckv": (batch, max_len, cfg.kv_lora_rank),
+            "krope": (batch, max_len, cfg.rope_head_dim),
+        }
+    return {
+        "k": (batch, max_len, cfg.n_kv_heads, cfg.hd),
+        "v": (batch, max_len, cfg.n_kv_heads, cfg.hd),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> dict:
+    """Allocate the decode cache pytree (zeros).
+
+    Hybrid models allocate the shared-attention KV cache per *application*
+    (``n_attn_apps``), not per layer — 6x smaller for zamba2.
+    """
+    dtype = dtype or cfg.jdtype
+    caches = []
+    for spec in segment_plan(cfg):
+        if spec.kind in ("dense", "moe"):
+            shapes = _attn_cache_shapes(cfg, batch, max_len)
+            caches.append({k: jnp.zeros((spec.count,) + s, dtype)
+                           for k, s in shapes.items()})
+        elif spec.kind == "ssm":
+            c = init_ssm_cache(cfg, batch, dtype)
+            caches.append(jax.tree.map(
+                lambda a: jnp.zeros((spec.count,) + a.shape, a.dtype), c))
+        elif spec.kind == "hybrid_super":
+            # inner ssm caches stacked (count, inner, ...); one shared-attn
+            # KV cache slot per super-block application.
+            c = init_ssm_cache(cfg, batch, dtype)
+            out = {"inner": jax.tree.map(
+                lambda a: jnp.zeros((spec.count, spec.inner) + a.shape, a.dtype), c)}
+            out["attn_k"] = jnp.zeros(
+                (spec.count, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype)
+            out["attn_v"] = jnp.zeros(
+                (spec.count, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype)
+            caches.append(out)
+    return {"segments": caches, "pos": jnp.zeros((), jnp.int32)}
+
+
+def _block_decode(cfg: ModelConfig, spec: SegmentSpec, p, cache_l, x, flag,
+                  pos, memory, shared_attn, app_idx):
+    """One block of the decode step; returns (x, new_cache_l)."""
+    if spec.kind in ("dense", "moe"):
+        h = rms_norm(x, p["norm1"])
+        if cfg.kv_lora_rank:
+            a, ckv, krope = mla_decode_step(cfg, p["attn"], h,
+                                            cache_l["ckv"], cache_l["krope"], pos)
+            new_cache = {"ckv": ckv, "krope": krope}
+        else:
+            a, ck, cv = attn_decode_step(cfg, p["attn"], h, cache_l["k"],
+                                         cache_l["v"], pos, is_global=flag)
+            new_cache = {"k": ck, "v": cv}
+        x = x + a
+        if spec.cross and memory is not None:
+            h = rms_norm(x, p["norm_cross"])
+            x = x + attn_block(cfg, p["cross"], h, kv=memory)
+        h = rms_norm(x, p["norm2"])
+        if spec.kind == "dense":
+            x = x + ffn_block(cfg, p["ffn"], h)
+        else:
+            out, _ = moe_block(cfg, p["moe"], h)
+            x = x + out
+        return x, new_cache, app_idx
+    if spec.kind == "ssm":
+        out, new_c = ssm_decode_step(cfg, p["ssm"], rms_norm(x, p["norm1"]),
+                                     cache_l)
+        return x + out, new_c, app_idx
+    if spec.kind == "hybrid_super":
+        new_inner = []
+        for j in range(spec.inner):
+            pj = jax.tree.map(lambda a: a[j], p["inner"])
+            cj = jax.tree.map(lambda a: a[j], cache_l["inner"])
+            out, new_c = ssm_decode_step(cfg, pj["ssm"],
+                                         rms_norm(x, pj["norm1"]), cj)
+            x = x + out
+            new_inner.append(new_c)
+        h = rms_norm(x, p["norm2"])
+        a, ck, cv = attn_decode_step(cfg, shared_attn["attn"], h,
+                                     cache_l["attn_k"], cache_l["attn_v"], pos)
+        x = x + a
+        if "ffn" in shared_attn:
+            x = x + ffn_block(cfg, shared_attn["ffn"], rms_norm(x, p["norm3"]))
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_inner)
+        return x, {"inner": stacked, "attn_k": ck, "attn_v": cv}, app_idx
+    raise ValueError(spec.kind)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, *, memory=None):
+    """One-token decode. tokens: (B, 1). Returns (logits, new_cache)."""
+    pos = cache["pos"]
+    x = shard_hint(_embed_tokens(cfg, params, tokens), "b1d")
+    shared = None
+    if "shared_attn" in params:
+        shared = {"attn": params["shared_attn"]}
+        if "shared_ffn" in params:
+            shared["ffn"] = params["shared_ffn"]
+    new_segs = []
+    for spec, seg, seg_cache in zip(segment_plan(cfg), params["segments"],
+                                    cache["segments"]):
+        if spec.global_flags:
+            flags = jnp.asarray(spec.global_flags)
+        else:
+            flags = jnp.ones((spec.count,), bool)
+
+        def body(x, inp):
+            p, flag, cl = inp
+            x, new_c, _ = _block_decode(
+                cfg, spec, p, cl, x, flag, pos, memory, shared, 0)
+            return x, new_c
+
+        x, new_cache = jax.lax.scan(body, x, (seg, flags, seg_cache))
+        new_segs.append(new_cache)
+
+    x = rms_norm(x, params["final_norm"])
+    unembed = params.get("unembed", params["embed"])
+    logits = shard_hint(x @ unembed.T.astype(x.dtype), "btv")
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, {"segments": new_segs, "pos": pos + 1}
+
+
+def prefill(cfg: ModelConfig, params, tokens, *, embeds=None, memory=None,
+            max_len: int | None = None):
+    """Run the prompt through the model, producing a primed cache.
+
+    Implemented as repeated single-token decode under ``lax.scan`` over the
+    prompt — compact HLO and exactly consistent with the decode path. For
+    high-throughput prefill use ``forward`` + cache extraction (roadmap).
+    """
+    b, s = tokens.shape
+    max_len = max_len or (s + 64)
+    cache = init_cache(cfg, b, max_len)
+
+    def body(cache, tok):
+        logits, cache = decode_step(cfg, params, cache, tok[:, None],
+                                    memory=memory)
+        return cache, logits[:, 0]
+
+    cache, logits = jax.lax.scan(body, cache, jnp.moveaxis(tokens, 1, 0))
+    return jnp.moveaxis(logits, 0, 1), cache

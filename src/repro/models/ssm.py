@@ -1,0 +1,196 @@
+"""Mamba-2 state-space blocks via SSD (state-space duality) [arXiv:2405.21060].
+
+Chunked algorithm: within-chunk attention-like quadratic term + cross-chunk
+linear state recurrence — the TPU-friendly decomposition (dense matmuls for
+the MXU inside chunks, a short ``lax.scan`` across chunks). The same math is
+implemented as a Pallas kernel in ``repro.kernels.ssd_scan`` with this module
+as its oracle.
+
+Projections for z / x / B / C / dt are stored as separate matrices (rather
+than one fused ``in_proj``) so tensor parallelism can shard the ``d_inner``
+and head dimensions cleanly over the ``model`` mesh axis without resharding
+at the split points; the depthwise convs are likewise separate per stream.
+
+Decode maintains an O(1) recurrent state — why the SSM/hybrid architectures
+are the ones that run the ``long_500k`` shape (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, dense_init, rms_norm
+
+__all__ = [
+    "init_ssm_params",
+    "ssm_block",
+    "ssm_decode_step",
+    "init_ssm_cache",
+    "ssd_chunked",
+]
+
+CONV_WIDTH = 4
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    hd = cfg.ssm_head_dim
+    nh = cfg.ssm_heads or d_inner // hd
+    n = cfg.ssm_state
+    return d_inner, hd, nh, n
+
+
+def init_ssm_params(cfg: ModelConfig, key) -> dict:
+    d_inner, hd, nh, n = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    dt = cfg.jdtype
+
+    def conv(k, dim):
+        return (jax.random.normal(k, (CONV_WIDTH, dim), jnp.float32) * 0.1).astype(dt)
+
+    return {
+        "w_z": dense_init(ks[0], (d, d_inner), dt),
+        "w_x": dense_init(ks[1], (d, d_inner), dt),
+        "w_b": dense_init(ks[2], (d, n), dt),
+        "w_c": dense_init(ks[3], (d, n), dt),
+        "w_dt": dense_init(ks[4], (d, nh), dt),
+        "conv_x": conv(ks[5], d_inner),
+        "conv_b": conv(ks[6], n),
+        "conv_c": conv(jax.random.fold_in(key, 7), n),
+        "a_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), dt),
+        "out_proj": dense_init(jax.random.fold_in(key, 8), (d_inner, d), dt),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv (width CONV_WIDTH) via shifted adds + SiLU."""
+    out = jnp.zeros_like(x)
+    s = x.shape[1]
+    for i in range(CONV_WIDTH):
+        shift = CONV_WIDTH - 1 - i
+        shifted = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :s]
+        out = out + shifted * w[i]
+    return jax.nn.silu(out)
+
+
+def ssd_chunked(x, dta, B, C, chunk: int):
+    """Chunked SSD scan.
+
+    x:   (b, s, h, p)   per-head inputs (dt already folded in by caller)
+    dta: (b, s, h)      dt * A  (negative)
+    B,C: (b, s, n)      input/output projections (single group)
+    Returns y (b, s, h, p) and final state (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    c = s // chunk
+    l = chunk
+    xr = x.reshape(b, c, l, h, p)
+    ar = dta.reshape(b, c, l, h)
+    Br = B.reshape(b, c, l, n)
+    Cr = C.reshape(b, c, l, n)
+
+    cs = jnp.cumsum(ar, axis=2)                       # (b,c,l,h) inclusive
+    last = cs[:, :, -1:, :]                           # (b,c,1,h)
+
+    # ---- intra-chunk (quadratic in l) -----------------------------------
+    # decay(t, s) = exp(cs_t - cs_s) for s <= t
+    dec = cs[:, :, :, None, :] - cs[:, :, None, :, :]          # (b,c,t,s,h)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    dec = jnp.where(mask[None, None, :, :, None], dec, -jnp.inf)
+    dec = jnp.exp(dec)
+    g = jnp.einsum("bctn,bcsn->bcts", Cr, Br)                  # (b,c,t,s)
+    m = (g[..., None] * dec).astype(x.dtype)                   # (b,c,t,s,h)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", m, xr)
+
+    # ---- chunk boundary states ------------------------------------------
+    w = jnp.exp(last - cs).astype(x.dtype)                     # (b,c,l,h)
+    states = jnp.einsum("bclh,bcln,bclhp->bchpn", w, Br, xr)   # (b,c,h,p,n)
+
+    # ---- inter-chunk recurrence ------------------------------------------
+    chunk_decay = jnp.exp(last[:, :, 0, :])                    # (b,c,h)
+
+    def step(carry, inp):
+        st, cd = inp                                           # (b,h,p,n), (b,h)
+        new = carry * cd[:, :, None, None].astype(carry.dtype) + st
+        return new, carry                                      # emit pre-chunk state
+
+    init = jnp.zeros((b, h, p, n), x.dtype)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)              # (b,c,h,p,n)
+
+    y_inter = jnp.einsum("bctn,bchpn,bcth->bcthp",
+                         Cr, prev_states, jnp.exp(cs).astype(x.dtype))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final
+
+
+def ssm_block(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Full Mamba-2 block: projections -> conv -> SSD -> gated norm -> out."""
+    d_inner, hd, nh, n = _dims(cfg)
+    b, s, _ = x.shape
+    z = x @ p["w_z"]
+    xin = _causal_conv(x @ p["w_x"], p["conv_x"])
+    B = _causal_conv(x @ p["w_b"], p["conv_b"])
+    C = _causal_conv(x @ p["w_c"], p["conv_c"])
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])                                           # (nh,)
+    dta = dt * a                                                       # (b,s,nh)
+    xh = xin.reshape(b, s, nh, hd)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    y, _ = ssd_chunked(xdt, dta, B, C, cfg.ssm_chunk)
+    y = y + xh * p["d_skip"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode path: O(1) recurrent state
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_inner, hd, nh, n = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, nh, hd, n), dtype),
+        "conv_x": jnp.zeros((batch, CONV_WIDTH - 1, d_inner), dtype),
+        "conv_b": jnp.zeros((batch, CONV_WIDTH - 1, n), dtype),
+        "conv_c": jnp.zeros((batch, CONV_WIDTH - 1, n), dtype),
+    }
+
+
+def _conv_step(cache_win, new, w):
+    win = jnp.concatenate([cache_win, new[:, None]], axis=1)   # (b, 4, dim)
+    out = jax.nn.silu(jnp.einsum("bwc,wc->bc", win, w))
+    return out, win[:, 1:]
+
+
+def ssm_decode_step(cfg: ModelConfig, p: dict, x: jnp.ndarray, cache: dict):
+    """One-token step. x: (b, 1, d). Returns (out, new_cache)."""
+    d_inner, hd, nh, n = _dims(cfg)
+    b = x.shape[0]
+    x0 = x[:, 0]
+    z = x0 @ p["w_z"]
+    xin, cx = _conv_step(cache["conv_x"], x0 @ p["w_x"], p["conv_x"])
+    B, cb = _conv_step(cache["conv_b"], x0 @ p["w_b"], p["conv_b"])
+    C, cc = _conv_step(cache["conv_c"], x0 @ p["w_c"], p["conv_c"])
+    dt = jax.nn.softplus((x0 @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a)                                      # (b, nh)
+    xh = xin.reshape(b, nh, hd)
+    upd = jnp.einsum("bhp,bn,bh->bhpn", xh, B, dt.astype(xh.dtype))
+    state = cache["state"] * decay[:, :, None, None].astype(xh.dtype) + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, C)
+    y = y + xh * p["d_skip"][None, :, None].astype(xh.dtype)
+    y = y.reshape(b, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"state": state, "conv_x": cx, "conv_b": cb, "conv_c": cc}

@@ -1,0 +1,62 @@
+"""Performance-tuning knobs (the §Perf hillclimb registry).
+
+Global, mutable, *explicitly recorded* knobs — every dry-run report states
+the tuning fingerprint so baselines and optimized variants are never mixed
+(the paper's factor discipline applied to ourselves).
+
+Knobs (all default to the paper-faithful/baseline behavior):
+
+  * ``moe_defer_combine_psum`` — drop the sharding hint on the MoE output
+    buffer so GSPMD can defer the model-axis reduction until *after* the
+    combine gather (reduces the reduced tensor from (B,E,C,D) to (B,S,D)).
+  * ``ce_chunk`` — compute the cross-entropy over sequence chunks
+    (bounds the f32 logit buffers: live set /= n_chunks).
+  * ``attn_additive_mask`` — apply attention masks as an additive bias
+    fused into the scale instead of a separate ``where`` pass.
+  * ``attn_probs_bf16`` — cast softmax numerator/denominator intermediates
+    to bf16 before the HBM round-trip (kernel-adjacent traffic halving).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict, replace
+
+__all__ = ["Tuning", "get_tuning", "set_tuning", "reset_tuning", "tuning_tag"]
+
+
+@dataclass
+class Tuning:
+    moe_defer_combine_psum: bool = False
+    moe_vmap_dispatch: bool = False    # batched scatter/gather (GSPMD keeps
+                                       # the batch dim sharded; avoids the
+                                       # full-batch all-reduce fallback)
+    ce_chunk: int = 0
+    attn_additive_mask: bool = False
+    attn_probs_bf16: bool = False
+    norm_bf16_io: bool = False         # rms_norm keeps x in bf16; only the
+                                       # variance reduction accumulates f32
+
+
+_TUNING = Tuning()
+
+
+def get_tuning() -> Tuning:
+    return _TUNING
+
+
+def set_tuning(**kw) -> Tuning:
+    global _TUNING
+    _TUNING = replace(_TUNING, **kw)
+    return _TUNING
+
+
+def reset_tuning() -> Tuning:
+    global _TUNING
+    _TUNING = Tuning()
+    return _TUNING
+
+
+def tuning_tag() -> str:
+    d = asdict(_TUNING)
+    on = [f"{k}={v}" for k, v in d.items() if v not in (False, 0)]
+    return ",".join(on) if on else "baseline"

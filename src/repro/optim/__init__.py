@@ -1,0 +1,6 @@
+"""Optimizers and distributed-optimization tricks."""
+
+from .adamw import OptimizerConfig, adamw_update, global_norm, init_opt_state, lr_at_step
+
+__all__ = ["OptimizerConfig", "adamw_update", "init_opt_state", "lr_at_step",
+           "global_norm"]

@@ -1,0 +1,67 @@
+"""Gradient compression with error feedback (cross-pod hop optimization).
+
+At 1000+ nodes the pod-to-pod (DCN) gradient reduction is the scarcest
+bandwidth. ``compress_tree``/``decompress_tree`` implement int8 blockwise
+quantization with an error-feedback residual (1-bit-Adam style memory):
+the quantization error of step ``t`` is added back into the gradient at
+``t+1``, keeping SGD/Adam convergence unaffected to first order.
+
+Used by the shard_map-based cross-pod reduction variant in
+``examples/compressed_dp.py`` and unit-tested for the error-feedback
+contraction property in ``tests/test_optim.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compress_tree",
+           "decompress_tree", "error_feedback_update"]
+
+BLOCK = 256
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise symmetric int8 quantization along the flattened array."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, shape,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_tree(grads):
+    return jax.tree.map(lambda g: quantize_int8(g), grads,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def decompress_tree(compressed, like):
+    return jax.tree.map(
+        lambda qs, g: dequantize_int8(qs[0], qs[1], g.shape, g.dtype),
+        compressed, like,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+
+
+def error_feedback_update(grads, residual):
+    """(grads + residual) -> (quantized-communicable grads, new residual)."""
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+    corrected = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r,
+                             grads, residual)
+    comp = compress_tree(corrected)
+    decomp = decompress_tree(comp, corrected)
+    new_residual = jax.tree.map(lambda c, d: c - d, corrected, decomp)
+    return comp, decomp, new_residual

@@ -1,0 +1,15 @@
+"""Distribution: sharding rules for DP/TP/EP/FSDP/SP over the production mesh."""
+
+from .sharding import (
+    ShardingConfig,
+    batch_specs,
+    cache_specs,
+    data_axes,
+    named,
+    param_specs,
+)
+
+__all__ = [
+    "ShardingConfig", "param_specs", "batch_specs", "cache_specs",
+    "named", "data_axes",
+]

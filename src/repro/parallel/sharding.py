@@ -1,0 +1,228 @@
+"""Sharding rules: parameter/activation PartitionSpecs for the production mesh.
+
+Parallelism dimensions supported (DESIGN.md §5):
+
+  * **DP**  — batch over ``("pod", "data")`` (the pod axis is pure data
+    parallel across pods; gradient reduction crosses the DCN-like hop).
+  * **TP**  — attention heads / FFN hidden / expert dim over ``"model"``
+    (Megatron layout: column-parallel in, row-parallel out).
+  * **EP**  — MoE experts over ``"model"``.
+  * **FSDP** — optionally shard the non-TP weight axis over ``"data"``
+    (ZeRO-3-like; XLA inserts all-gather on use / reduce-scatter on grads).
+  * **SP**  — long-context activations: sequence dim constrained over
+    ``"model"`` between blocks (opt-in; used by long-context hillclimbs).
+
+Rules are keyed on parameter-tree paths; anything unmatched is replicated.
+All stacked-layer leading axes are never sharded (they are scanned over).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingConfig", "param_specs", "batch_specs", "cache_specs",
+           "named", "data_axes", "sanitize"]
+
+
+@dataclass(frozen=True)
+class ShardingConfig:
+    mode: str = "fsdp_tp"     # "tp" | "fsdp_tp" | "dp"
+    tp_axis: str = "model"
+    fsdp_axis: str = "data"   # weights' non-TP dim sharded here in fsdp_tp
+    shard_kv: bool = True     # shard KV projections when heads divide tp size
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    """Batch axes: ('pod', 'data') on the multi-pod mesh, ('data',) single."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def sanitize(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on any dim the mesh axes do not divide (jit
+    in_shardings require exact divisibility; e.g. mamba2's vocab 50280 is
+    not divisible by 16 — its embedding falls back to model-sharding the
+    d_model dim via the rules, or replication here)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        out.append(entry if dim % _axis_size(mesh, entry) == 0 else None)
+    return P(*out)
+
+
+def _divides(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0
+
+
+def param_specs(params_shapes, cfg, mesh: Mesh,
+                sharding: ShardingConfig | None = None):
+    """Map a (shape-only) parameter pytree to PartitionSpecs.
+
+    ``params_shapes`` is the pytree of ShapeDtypeStructs from
+    ``jax.eval_shape(init_params, ...)`` (never materialized for full
+    configs). ``cfg`` is the ModelConfig (for head counts etc.).
+    """
+    sh = sharding or ShardingConfig()
+    tp = sh.tp_axis if sh.tp_axis in mesh.axis_names else None
+    fsdp = (sh.fsdp_axis if sh.mode == "fsdp_tp"
+            and sh.fsdp_axis in mesh.axis_names else None)
+    if sh.mode == "dp":
+        tp = fsdp = None
+    tp_size = mesh.shape[tp] if tp else 1
+
+    def spec_of(path, leaf) -> P:
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        name = keys[-1] if keys else ""
+        shape = leaf.shape
+        is_expert = "moe" in keys and "shared" not in keys
+        ep_ok = cfg.n_experts % tp_size == 0 if cfg.n_experts else False
+        kv_ok = sh.shard_kv and cfg.n_kv_heads % tp_size == 0
+
+        def tail_for():
+            # trailing-dims rule; leading stacked axes (scan layers,
+            # hybrid super x inner) are padded with None below.
+            if name in ("embed", "unembed"):
+                return (tp, None)
+            if name == "wq":
+                return (fsdp, tp)
+            if name in ("wk", "wv"):
+                return (fsdp, tp if kv_ok else None)
+            if name == "wo":
+                return (tp, fsdp)
+            if name in ("w_uk", "w_uv", "w_uq"):
+                return (None, tp)
+            if name in ("w_dkv", "w_dq"):
+                return (fsdp, None)
+            if is_expert and name in ("w_gate", "w_up"):
+                # EP over "model" when E divides; else TP the hidden dim so
+                # the model axis is never wasted (mixtral: E=8 < 16).
+                return (tp, fsdp, None) if ep_ok else (None, fsdp, tp)
+            if is_expert and name == "w_down":
+                return (tp, None, fsdp) if ep_ok else (None, tp, fsdp)
+            if name in ("w_gate", "w_up"):
+                return (fsdp, tp)
+            if name == "w_down":
+                return (tp, fsdp)
+            if name == "router":
+                return (None, None)
+            if name in ("w_z", "w_x"):
+                return (fsdp, tp)
+            if name in ("w_b", "w_c", "w_dt"):
+                return (fsdp, None)
+            if name == "out_proj":
+                return (tp, fsdp)
+            if name == "conv_x":
+                return (None, tp)
+            if name in ("conv_b", "conv_c"):
+                return (None, None)
+            return None
+
+        tail = tail_for()
+        if tail is None or len(shape) < len(tail):
+            return P(*([None] * len(shape)))
+        lead = len(shape) - len(tail)
+        spec = P(*([None] * lead + list(tail)))
+        # vocab not divisible by tp (mamba2/seamless): shard d_model instead
+        if name in ("embed", "unembed") and shape[0] % max(1, tp_size) != 0:
+            spec = P(None, tp)
+        return sanitize(spec, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_shapes)
+
+
+def batch_specs(mesh: Mesh, batch_shapes):
+    """Input batch: leading batch dim over the data axes, rest replicated.
+
+    Batches too small to split over the data axes (long-context decode at
+    global_batch=1) stay replicated."""
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def spec_of(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        b = leaf.shape[0]
+        lead = dp if dp and b % dp_size == 0 else None
+        return P(lead, *([None] * (nd - 1)))
+
+    return jax.tree.map(spec_of, batch_shapes)
+
+
+def cache_specs(cfg, mesh: Mesh, cache_shapes,
+                sharding: ShardingConfig | None = None):
+    """Decode-cache sharding: batch over data axes, heads over model.
+
+    Cache leaves: stacked (L, B, T, Hkv, Dh) or MLA (L, B, T, r) or SSM
+    (L, B, nh, hd, n) / conv (L, B, w, dim); ``pos`` scalar replicated.
+    """
+    sh = sharding or ShardingConfig()
+    tp = sh.tp_axis if sh.tp_axis in mesh.axis_names else None
+    tp_size = mesh.shape[tp] if tp else 1
+    dp = data_axes(mesh)
+
+    def spec_of(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        name = keys[-1] if keys else ""
+        shape = leaf.shape
+        if name == "pos" or len(shape) == 0:
+            return P()
+        kv_ok = sh.shard_kv and cfg.n_kv_heads % tp_size == 0
+        nh = cfg.ssm_heads or (cfg.ssm_expand * cfg.d_model // max(1, cfg.ssm_head_dim))
+        nh_ok = cfg.ssm_head_dim and nh % tp_size == 0
+        # batch dim position depends on the tail rank; check divisibility.
+        dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+        tails = {
+            # (B, T, Hkv, Dh)
+            "k": (dp, None, tp if kv_ok else None, None),
+            "v": (dp, None, tp if kv_ok else None, None),
+            "attn_k": (dp, None, tp if kv_ok else None, None),
+            "attn_v": (dp, None, tp if kv_ok else None, None),
+            # (B, T, r)
+            "ckv": (dp, None, None),
+            "krope": (dp, None, None),
+            # (B, nh, hd, n)
+            "state": (dp, tp if nh_ok else None, None, None),
+            # (B, w, dim)
+            "conv_x": (dp, None, tp if nh_ok else None),
+            "conv_b": (dp, None, None),
+            "conv_c": (dp, None, None),
+        }
+        tail = tails.get(name)
+        if tail is None or len(shape) < len(tail):
+            b = shape[0]
+            lead0 = dp if dp and b % dp_size == 0 else None
+            return sanitize(P(*([lead0] + [None] * (len(shape) - 1))),
+                            shape, mesh)
+        lead = len(shape) - len(tail)
+        b = shape[lead]
+        tail = list(tail)
+        if not (dp and b % dp_size == 0):
+            tail[0] = None
+            # long-context single-sequence decode: shard the KV time axis
+            # over the data axes instead (context-parallel cache).
+            if name in ("k", "v", "attn_k", "attn_v", "ckv", "krope") \
+                    and len(tail) >= 2 and shape[lead + 1] % max(1, dp_size) == 0:
+                tail[1] = dp
+        return sanitize(P(*([None] * lead + list(tail))), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache_shapes)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,135 @@
+"""Clock-synchronization correctness: merge exactness, per-algorithm
+accuracy, and the paper's qualitative claims (Figs. 8-10)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClockParams,
+    LinearModel,
+    NetParams,
+    SimNet,
+    linear_fit,
+    make_sync,
+    probe_offsets,
+    true_offsets,
+)
+
+PAPER_PARAMS = dict(n_fitpts=300, n_exchanges=60)
+
+
+def test_merge_lms_exact_composition():
+    """MERGE_LMS (Alg. 4) composes child-time-parameterized drift models
+    exactly — verified on noise-free linear clocks."""
+    t = np.linspace(0.0, 50.0, 200)
+
+    def clock(off, sk):
+        return off + (1 + sk) * t
+
+    t1 = clock(0.0, 0.0)
+    t2 = clock(1.7e-3, 2e-5)
+    t3 = clock(-0.4e-3, -3e-5)
+    lm21 = linear_fit(t2, t2 - t1)
+    lm32 = linear_fit(t3, t3 - t2)
+    merged = LinearModel.merge(lm21, lm32)
+    direct = linear_fit(t3, t3 - t1)
+    assert abs(merged.slope - direct.slope) < 1e-15
+    assert abs(merged.intercept - direct.intercept) < 1e-12
+
+
+def test_normalize_denormalize_roundtrip():
+    lm = LinearModel(slope=3e-5, intercept=-2e-3)
+    for t in [0.0, 1.0, 17.3, 1e4]:
+        assert abs(lm.denormalize(lm.normalize(t)) - t) < 1e-9
+
+
+@pytest.mark.parametrize("name", ["skampi", "netgauge", "jk", "hca", "hca2"])
+def test_initial_offset_small(name):
+    """Fig. 8: every algorithm synchronizes to ~microsecond offsets
+    immediately after the sync phase."""
+    net = SimNet(8, seed=3)
+    kw = PAPER_PARAMS if name in ("jk", "hca", "hca2") else {}
+    res = make_sync(name, **kw).synchronize(net)
+    off = np.abs(true_offsets(net, res))[1:]
+    assert off.max() < 20e-6, f"{name}: {off.max()*1e6:.1f}us"
+
+
+def test_drift_correction_beats_offset_only():
+    """Fig. 9: after 20 s, drift-aware algorithms (JK/HCA) hold ~us offsets
+    while offset-only ones (SKaMPI/Netgauge) drift to hundreds of us."""
+    results = {}
+    for name in ["skampi", "hca"]:
+        net = SimNet(8, seed=5)
+        kw = PAPER_PARAMS if name == "hca" else {}
+        res = make_sync(name, **kw).synchronize(net)
+        net.sleep_all(20.0)
+        results[name] = np.abs(true_offsets(net, res))[1:].max()
+    assert results["skampi"] > 50e-6          # drifted
+    assert results["hca"] < 20e-6             # drift-corrected
+    assert results["hca"] < results["skampi"] / 5
+
+
+def test_hca_faster_than_jk_at_scale():
+    """Fig. 10's trade-off: at larger p, HCA's O(log p) slope phase
+    finishes well before JK's O(p) interleaved phase."""
+    kw = dict(n_fitpts=40, n_exchanges=10)
+    net1 = SimNet(32, seed=7)
+    hca = make_sync("hca", **kw).synchronize(net1)
+    net2 = SimNet(32, seed=7)
+    jk = make_sync("jk", **kw).synchronize(net2)
+    assert hca.duration < jk.duration
+
+
+def test_probe_matches_ground_truth():
+    """The paper-faithful network probe (Alg. 20) agrees with simulator
+    ground truth up to ~RTT/2 error."""
+    net = SimNet(6, seed=11)
+    res = make_sync("hca", n_fitpts=200, n_exchanges=40).synchronize(net)
+    probed = probe_offsets(net, res, n_rounds=10)
+    truth = true_offsets(net, res)
+    assert np.max(np.abs(probed[1:] - truth[1:])) < 30e-6
+
+
+def test_hca2_hierarchical_intercepts_worse_than_hca():
+    """§4.4/Fig. 9: hierarchically merged intercepts accumulate error."""
+    errs = {}
+    for name in ["hca", "hca2"]:
+        accs = []
+        for seed in range(3):
+            net = SimNet(16, seed=100 + seed)
+            res = make_sync(name, n_fitpts=200, n_exchanges=40).synchronize(net)
+            net.sleep_all(5.0)
+            accs.append(np.abs(true_offsets(net, res))[1:].max())
+        errs[name] = np.median(accs)
+    assert errs["hca2"] >= errs["hca"] * 0.8  # hca2 not better (usually worse)
+
+
+def test_netgauge_error_grows_with_rounds():
+    """Fig. 8(b): Netgauge's tree-summed offsets accumulate error with p."""
+    small, big = [], []
+    for seed in range(4):
+        net = SimNet(4, seed=200 + seed)
+        res = make_sync("netgauge").synchronize(net)
+        small.append(np.abs(true_offsets(net, res))[1:].max())
+        net = SimNet(64, seed=300 + seed)
+        res = make_sync("netgauge").synchronize(net)
+        big.append(np.abs(true_offsets(net, res))[1:].max())
+    assert np.median(big) > np.median(small)
+
+
+def test_frequency_estimation_error_inflates_drift():
+    """§4.2.1 / Fig. 5: a ~4.3e-6 frequency-estimation error adds ~us/s of
+    drift to an offset-only global clock."""
+    base, freqerr = [], []
+    for seed in range(3):
+        net = SimNet(8, seed=400 + seed,
+                     clocks=ClockParams(skew_sigma=1e-7))
+        res = make_sync("skampi").synchronize(net)
+        net.sleep_all(10.0)
+        base.append(np.abs(true_offsets(net, res))[1:].max())
+        net = SimNet(8, seed=400 + seed,
+                     clocks=ClockParams(skew_sigma=1e-7, freq_est_sigma=4.3e-6))
+        res = make_sync("skampi").synchronize(net)
+        net.sleep_all(10.0)
+        freqerr.append(np.abs(true_offsets(net, res))[1:].max())
+    assert np.median(freqerr) > 3 * np.median(base)

@@ -1,0 +1,167 @@
+"""Window-based measurement, barrier skew (Figs. 11-12, 21-22), the
+experimental design (Alg. 5/6) and comparison engine (Figs. 27-30)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ExperimentDesign,
+    SimNet,
+    TestCase,
+    analyze_records,
+    assert_comparable,
+    capture_factors,
+    compare_tables,
+    make_op,
+    make_sync,
+    probe_barrier_skew,
+    run_barrier_timed,
+    run_design,
+    run_windowed,
+    wilcoxon_rank_sum,
+)
+
+SYNC_KW = dict(n_fitpts=200, n_exchanges=40)
+
+
+def _synced_net(p=8, seed=0):
+    net = SimNet(p, seed=seed)
+    sync = make_sync("hca", **SYNC_KW).synchronize(net)
+    return net, sync
+
+
+def test_windowed_measurement_sane():
+    net, sync = _synced_net()
+    op = make_op("allreduce")
+    wr = run_windowed(net, sync, op, 8192, 200, win_size=300e-6)
+    base = op.base_time(net.p, 8192)
+    mean = wr.valid_times.mean()
+    assert 0.8 * base < mean < 2.5 * base
+    assert wr.invalid_fraction < 0.2
+
+
+def test_window_too_small_discards_measurements():
+    """Fig. 21: shrinking the window raises the invalid fraction."""
+    net, sync = _synced_net(seed=1)
+    op = make_op("alltoall")
+    big = run_windowed(net, sync, op, 8192, 150, win_size=500e-6)
+    net2, sync2 = _synced_net(seed=1)
+    small = run_windowed(net2, sync2, op, 8192, 150, win_size=18e-6)
+    assert small.invalid_fraction > big.invalid_fraction
+
+
+def test_barrier_skew_biases_measurement():
+    """§4.6 / Figs. 11+13: measuring through a skewed library barrier
+    changes the result by ~the exit skew, while window-based measurement
+    (aligned starts) reports ~the true op duration — so the barrier
+    implementation is part of what you measure."""
+    op_kw = dict(rank_imbalance=0.01, noise_sigma=0.01, tail_prob=0.0)
+    skew = 40e-6
+
+    net, sync = _synced_net(p=16, seed=2)
+    wr = run_windowed(net, sync, make_op("allreduce", **op_kw), 1024, 150,
+                      win_size=400e-6)
+    mean_window = wr.valid_times.mean()
+
+    net2, _ = _synced_net(p=16, seed=2)
+    br_skewed = run_barrier_timed(net2, make_op("allreduce", **op_kw), 1024,
+                                  150, barrier_exit_skew=skew)
+    net3, _ = _synced_net(p=16, seed=2)
+    br_clean = run_barrier_timed(net3, make_op("allreduce", **op_kw), 1024,
+                                 150, use_library_barrier=False)
+
+    mean_skewed = np.mean(br_skewed.times_local)
+    mean_clean = np.mean(br_clean.times_local)
+    # the library's extra exit skew shows up ~1:1 in the measurement
+    assert mean_skewed - mean_clean > 0.5 * skew
+    # any barrier leaves residual skew vs. window-aligned starts
+    assert mean_clean > mean_window
+    base = make_op("allreduce", **op_kw).base_time(16, 1024)
+    assert mean_window < base * 1.6
+
+
+def test_probe_barrier_skew_profile():
+    net = SimNet(16, seed=3)
+    prof = probe_barrier_skew(net, nrep=200, barrier_exit_skew=40e-6)
+    means = prof.mean(axis=0)
+    assert means.max() > 20e-6              # rank-dependent exit skew visible
+    net2 = SimNet(16, seed=3)
+    prof2 = probe_barrier_skew(net2, nrep=200, use_library_barrier=False)
+    assert prof2.mean(axis=0).max() < means.max()
+
+
+# ---------------------------------------------------------------------------
+# Experimental design (Algorithm 5/6)
+# ---------------------------------------------------------------------------
+
+def _sim_campaign(seed0, op_kw=None, n=12, nrep=60):
+    """Run the full paper method against the simulator."""
+    cases = [TestCase("allreduce", m) for m in (256, 4096)]
+    op_kw = op_kw or {}
+
+    def epoch_factory(epoch):
+        net = SimNet(8, seed=seed0 + 1000 * epoch)
+        sync = make_sync("hca", **SYNC_KW).synchronize(net)
+        return (net, sync, make_op("allreduce", **op_kw))
+
+    def measure(ctx, case, nrep):
+        net, sync, op = ctx
+        wr = run_windowed(net, sync, op, case.msize, nrep, win_size=400e-6)
+        times = wr.valid_times
+        return times if times.size else wr.times
+
+    design = ExperimentDesign(n_launch_epochs=n, nrep=nrep, seed=seed0)
+    records = run_design(design, epoch_factory, measure, cases)
+    return analyze_records(records)
+
+
+def test_design_produces_distribution_of_epoch_averages():
+    table = _sim_campaign(0, n=6, nrep=40)
+    for case in table.cases():
+        med = table.medians(case)
+        assert med.size == 6
+        assert np.all(med > 0)
+
+
+def test_launch_epoch_is_a_factor():
+    """§5.2: per-epoch means differ more across epochs than within."""
+    table = _sim_campaign(7, op_kw=dict(epoch_bias_sigma=0.05), n=10, nrep=60)
+    case = table.cases()[0]
+    med = table.medians(case)
+    assert np.std(med) / np.mean(med) > 0.005
+
+
+def test_comparison_detects_real_difference():
+    """Figs. 28/30: Wilcoxon on per-epoch medians separates a 12% slowdown
+    and stays silent on identical implementations."""
+    fast = _sim_campaign(20, op_kw=dict(gamma=2.0e-6), n=10, nrep=60)
+    slow = _sim_campaign(40, op_kw=dict(gamma=2.0e-6, alpha=4.5e-6), n=10, nrep=60)
+    same = _sim_campaign(60, op_kw=dict(gamma=2.0e-6), n=10, nrep=60)
+
+    rows = compare_tables(fast, slow)
+    assert any(r.p_a_less <= 0.05 for r in rows), \
+        [(r.case.msize, r.p_a_less) for r in rows]
+    rows_same = compare_tables(fast, same)
+    assert all(r.p_two_sided > 0.001 for r in rows_same)
+
+
+def test_factor_comparability_guard():
+    a = capture_factors(sync_method="hca", nrep=100)
+    b = capture_factors(sync_method="barrier", nrep=100)
+    assert_comparable(a, b, ("sync_method",))
+    c = capture_factors(sync_method="barrier", nrep=200)
+    with pytest.raises(ValueError):
+        assert_comparable(a, c, ("sync_method",))
+
+
+def test_reproducibility_of_method():
+    """Fig. 31(c): the full method's normalized run-times disperse <~10%
+    across independent trials."""
+    means = []
+    for trial in range(4):
+        table = _sim_campaign(100 + 17 * trial, n=6, nrep=50)
+        case = table.cases()[0]
+        means.append(np.mean(table.means(case)))
+    means = np.array(means)
+    norm = means / means.min()
+    assert norm.max() < 1.10

@@ -1,0 +1,155 @@
+"""Statistics layer: Tukey, Wilcoxon (vs. known values), CIs, ACF, JB."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    autocorr_significant_lags,
+    autocorrelation,
+    jarque_bera,
+    mean_confidence_interval,
+    normal_ppf,
+    significance_stars,
+    t_ppf,
+    tukey_filter,
+    wilcoxon_rank_sum,
+)
+
+
+def test_tukey_removes_spikes_keeps_bulk():
+    rng = np.random.default_rng(0)
+    x = rng.normal(100.0, 1.0, 1000)
+    x[::100] = 1000.0  # OS-noise spikes
+    kept = tukey_filter(x)
+    assert kept.max() < 110
+    assert kept.size > 900
+
+
+def test_tukey_small_samples_passthrough():
+    x = np.array([1.0, 2.0, 3.0])
+    assert np.array_equal(tukey_filter(x), x)
+
+
+def test_normal_ppf_known_values():
+    assert abs(normal_ppf(0.975) - 1.959964) < 1e-5
+    assert abs(normal_ppf(0.5)) < 1e-12
+    assert abs(normal_ppf(0.025) + 1.959964) < 1e-5
+
+
+def test_t_ppf_known_values():
+    # R: qt(0.975, 10) = 2.228139; qt(0.975, 29) = 2.045230
+    assert abs(t_ppf(0.975, 10) - 2.228139) < 5e-3
+    assert abs(t_ppf(0.975, 29) - 2.045230) < 2e-3
+
+
+def test_wilcoxon_known_value():
+    # scipy.stats.mannwhitneyu(x, y, alternative='two-sided',
+    # method='asymptotic', use_continuity=True) reference
+    x = np.array([1.0, 2.0, 3.0, 4.0, 10.0, 12.0, 14.0, 16.0, 18.0, 20.0])
+    y = np.array([5.0, 6.0, 7.0, 8.0, 9.0, 11.0, 13.0, 15.0, 17.0, 19.0])
+    res = wilcoxon_rank_sum(x, y)
+    assert res.statistic == 45.0           # U1
+    assert 0.70 < res.p_value < 0.76       # scipy: 0.7337
+
+
+def test_wilcoxon_direction():
+    rng = np.random.default_rng(1)
+    a = rng.normal(10, 1, 30)
+    b = a + 2.0
+    assert wilcoxon_rank_sum(a, b, "less").p_value < 0.001
+    assert wilcoxon_rank_sum(a, b, "greater").p_value > 0.99
+    assert wilcoxon_rank_sum(a, b, "two-sided").significant
+
+
+def test_wilcoxon_null_uniform_p():
+    """Under H0 the test should reject at ~the nominal rate."""
+    rng = np.random.default_rng(2)
+    rejections = 0
+    trials = 200
+    for _ in range(trials):
+        a = rng.normal(0, 1, 25)
+        b = rng.normal(0, 1, 25)
+        if wilcoxon_rank_sum(a, b).p_value <= 0.05:
+            rejections += 1
+    assert rejections / trials < 0.12
+
+
+def test_stars():
+    assert significance_stars(0.0001) == "***"
+    assert significance_stars(0.005) == "**"
+    assert significance_stars(0.03) == "*"
+    assert significance_stars(0.2) == ""
+
+
+def test_mean_ci_coverage():
+    rng = np.random.default_rng(3)
+    hits = 0
+    for _ in range(300):
+        x = rng.normal(5.0, 2.0, 30)
+        m, lo, hi = mean_confidence_interval(x, 0.95)
+        hits += lo <= 5.0 <= hi
+    assert 0.90 <= hits / 300 <= 0.99
+
+
+def test_jarque_bera_discriminates():
+    rng = np.random.default_rng(4)
+    _, p_norm = jarque_bera(rng.normal(0, 1, 500))
+    _, p_exp = jarque_bera(rng.exponential(1.0, 500))
+    assert p_norm > 0.01
+    assert p_exp < 1e-6
+
+
+def test_autocorrelation_detects_ar1():
+    rng = np.random.default_rng(5)
+    n = 2000
+    x = np.zeros(n)
+    for i in range(1, n):
+        x[i] = 0.6 * x[i - 1] + rng.normal()
+    sig = autocorr_significant_lags(x, max_lag=10)
+    assert 1 in sig
+    white = rng.normal(0, 1, n)
+    assert autocorr_significant_lags(white, max_lag=10).size <= 1
+
+
+# ---------------------------------------------------------------------------
+# property-based tests
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6,
+                          allow_nan=False), min_size=8, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_tukey_subset_and_idempotent(xs):
+    x = np.array(xs)
+    kept = tukey_filter(x)
+    assert kept.size <= x.size
+    # every kept element is in the original multiset
+    assert np.all(np.isin(kept, x))
+    # idempotence is NOT generally true for Tukey; but re-filtering never
+    # grows the sample
+    again = tukey_filter(kept)
+    assert again.size <= kept.size
+
+
+@given(st.integers(5, 40), st.integers(5, 40), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_wilcoxon_symmetry(n1, n2, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(0, 1, n1)
+    b = rng.normal(0.5, 1, n2)
+    p_ab = wilcoxon_rank_sum(a, b, "less").p_value
+    p_ba = wilcoxon_rank_sum(b, a, "greater").p_value
+    assert abs(p_ab - p_ba) < 1e-9
+    p2 = wilcoxon_rank_sum(a, b).p_value
+    assert 0.0 <= p2 <= 1.0
+
+
+@given(st.floats(0.01, 0.99))
+@settings(max_examples=50, deadline=None)
+def test_normal_ppf_inverse(q):
+    z = normal_ppf(q)
+    # Phi(z) == q
+    phi = 0.5 * math.erfc(-z / math.sqrt(2))
+    assert abs(phi - q) < 1e-6

@@ -1,0 +1,64 @@
+"""Every performance knob must be semantics-preserving (§Perf discipline):
+the tuned lowering computes the same loss as the paper-faithful baseline."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import init_params, loss_fn
+from repro.models.tuning import reset_tuning, set_tuning, tuning_tag
+
+
+@pytest.fixture(autouse=True)
+def _clean_tuning():
+    reset_tuning()
+    yield
+    reset_tuning()
+
+
+def _loss(arch, **knobs):
+    cfg = get_smoke(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    toks = jax.random.randint(key, (2, 64), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    reset_tuning()
+    if knobs:
+        set_tuning(**knobs)
+    out = float(loss_fn(cfg, params, batch)[0])
+    reset_tuning()
+    return out
+
+
+def test_moe_vmap_dispatch_equivalent():
+    base = _loss("mixtral-8x22b")
+    tuned = _loss("mixtral-8x22b", moe_vmap_dispatch=True)
+    assert abs(base - tuned) < 1e-5
+
+
+def test_ce_chunk_equivalent():
+    base = _loss("gemma2-2b")
+    tuned = _loss("gemma2-2b", ce_chunk=4)
+    assert abs(base - tuned) < 1e-4
+
+
+def test_attn_mask_and_norm_knobs_equivalent():
+    base = _loss("gemma3-27b")
+    tuned = _loss("gemma3-27b", attn_additive_mask=True, norm_bf16_io=True)
+    assert abs(base - tuned) < 1e-4
+
+
+def test_attn_probs_bf16_close():
+    # bf16 softmax intermediates: small, bounded deviation allowed
+    base = _loss("granite-20b")
+    tuned = _loss("granite-20b", attn_probs_bf16=True)
+    assert abs(base - tuned) < 5e-2
+
+
+def test_tuning_tag_roundtrip():
+    reset_tuning()
+    assert tuning_tag() == "baseline"
+    set_tuning(moe_vmap_dispatch=True, ce_chunk=8)
+    tag = tuning_tag()
+    assert "moe_vmap_dispatch=True" in tag and "ce_chunk=8" in tag
