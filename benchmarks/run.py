@@ -1,27 +1,72 @@
-"""Benchmark harness entry point: ``python -m benchmarks.run [--only ...]``.
+"""Benchmark harness entry point: ``python -m benchmarks.run [options]``.
 
 One function per paper table/figure (see ``benchmarks.suite``). Prints
-``name,us_per_call,derived`` CSV. The full suite runs in a few minutes on a
-single CPU core; ``--only fig9`` style substring filters select subsets.
+``name,us_per_call,derived`` CSV; per-bench wall-clock goes to stderr.
+
+Options:
+  --only SUBSTR   substring filter on benchmark function names
+                  (e.g. ``--only fig`` for the simulation-backed figures,
+                  ``--only micro`` for the engine microbenchmark)
+  --list          print the available benchmark names and exit
+  --seed N        offset every simulator seed by N (re-rolls the whole
+                  suite under a different RNG universe; default 0)
+  --workers N     processes for campaign launch epochs (default 1 =
+                  serial; N > 1 gives bit-identical results and pays off
+                  only when one epoch outweighs pool startup)
+  --json PATH     also write machine-readable results: per-bench wall-clock
+                  seconds + rows, for recording the perf trajectory in CI
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="MPI-benchmarking-revisited reproduction suite")
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark names")
+    ap.add_argument("--list", action="store_true",
+                    help="list available benchmarks and exit")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="offset added to every simulator seed (>= 0)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="process-pool size for campaign launch epochs")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write per-bench wall-clock + rows as JSON")
     args = ap.parse_args()
+    if args.seed < 0:
+        ap.error("--seed must be >= 0 (it offsets non-negative RNG seeds)")
 
+    from benchmarks import suite
     from benchmarks.suite import ALL_BENCHES
 
+    if args.list:
+        for bench in ALL_BENCHES:
+            doc = (bench.__doc__ or "").strip().splitlines()[0]
+            print(f"{bench.__name__}: {doc}")
+        return
+
+    if args.json:
+        try:  # fail fast, not after minutes of benchmarking; append mode
+            with open(args.json, "a"):  # so an existing file is untouched
+                pass
+        except OSError as e:
+            ap.error(f"--json path not writable: {e}")
+
+    suite.SEED_OFFSET = args.seed
+    if args.workers is not None:
+        suite.N_WORKERS = max(1, args.workers)
+
+    report = {"seed_offset": args.seed, "workers": suite.N_WORKERS,
+              "benches": []}
     print("name,us_per_call,derived")
     failures = 0
+    t_suite = time.time()
     for bench in ALL_BENCHES:
         if args.only and args.only not in bench.__name__:
             continue
@@ -30,12 +75,25 @@ def main() -> None:
             rows = bench()
         except Exception as e:  # keep the suite running; report at the end
             print(f"{bench.__name__},NaN,ERROR:{e!r}", flush=True)
+            report["benches"].append(
+                dict(name=bench.__name__, seconds=time.time() - t0,
+                     error=repr(e), rows=[]))
             failures += 1
             continue
         for name, us, derived in rows:
             print(f"{name},{us:.3f},{derived}", flush=True)
-        print(f"# {bench.__name__} took {time.time() - t0:.1f}s",
-              file=sys.stderr, flush=True)
+        dt = time.time() - t0
+        print(f"# {bench.__name__} took {dt:.1f}s", file=sys.stderr, flush=True)
+        report["benches"].append(
+            dict(name=bench.__name__, seconds=round(dt, 3),
+                 rows=[dict(name=n, us_per_call=u, derived=d)
+                       for n, u, d in rows]))
+    report["total_seconds"] = round(time.time() - t_suite, 3)
+    report["failures"] = failures
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr, flush=True)
     if failures:
         raise SystemExit(f"{failures} benchmarks failed")
 

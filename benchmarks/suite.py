@@ -8,9 +8,19 @@ quantity (drift, p-value, invalid fraction, ...).
 Simulation-backed figures use the calibrated cluster simulator
 (:mod:`repro.core.simnet`); ``real_*`` entries time actual jitted JAX
 executables through the same experimental design (the deployment path).
+
+Module knobs, set by ``benchmarks.run`` flags:
+
+  * ``SEED_OFFSET`` (``--seed``): added to every simulator seed so the
+    whole suite can be re-rolled under a different RNG universe;
+  * ``N_WORKERS`` (``--workers``): campaign launch epochs fan out over a
+    process pool (results are bit-identical to the serial run).
 """
 
 from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -33,31 +43,70 @@ from repro.core import (
     tukey_filter,
     wilcoxon_rank_sum,
 )
+from repro.core.window import run_windowed_scalar
 
 SYNC_KW = dict(n_fitpts=200, n_exchanges=40)
 ALGOS = ("skampi", "netgauge", "jk", "hca", "hca2")
+
+SEED_OFFSET = 0    # set by benchmarks.run --seed
+# Campaign launch epochs can fan out over processes (benchmarks.run
+# --workers). Serial by default: with the vectorized engine a simulated
+# epoch is ~10 ms, far below process-pool startup cost; epoch parallelism
+# pays off for heavyweight epochs (large p, real jit-compiled epochs).
+N_WORKERS = 1
+
+
+def _seed(s):
+    return s + SEED_OFFSET
 
 
 def _kw(name):
     return SYNC_KW if name in ("jk", "hca", "hca2") else {}
 
 
-def _campaign(seed0, n=10, nrep=60, msizes=(256, 4096), op_kw=None, p=8):
-    cases = [TestCase("allreduce", m) for m in msizes]
-    op_kw = op_kw or {}
+@dataclass
+class _SimEpochFactory:
+    """Fresh simulated launch epoch: new cluster + clock sync + op model.
 
-    def epoch_factory(epoch):
-        net = SimNet(p, seed=seed0 + 1000 * epoch)
-        sync = make_sync("hca", **SYNC_KW).synchronize(net)
-        return (net, sync, make_op("allreduce", **op_kw))
+    A module-level class (not a closure) so campaign epochs can be shipped
+    to pool workers by :func:`repro.core.design.run_design`.
+    """
 
-    def measure(ctx, case, nrep):
+    p: int
+    seed0: int
+    op: str = "allreduce"
+    op_kw: dict = field(default_factory=dict)
+    sync_name: str = "hca"
+    sync_kw: dict = field(default_factory=lambda: dict(SYNC_KW))
+
+    def __call__(self, epoch):
+        net = SimNet(self.p, seed=self.seed0 + 1000 * epoch)
+        sync = make_sync(self.sync_name, **self.sync_kw).synchronize(net)
+        return (net, sync, make_op(self.op, **self.op_kw))
+
+
+@dataclass
+class _WindowedMeasure:
+    """Window-synchronized measurement of one case (picklable)."""
+
+    win_size: float = 400e-6
+
+    def __call__(self, ctx, case, nrep):
         net, sync, op = ctx
-        wr = run_windowed(net, sync, op, case.msize, nrep, win_size=400e-6)
+        wr = run_windowed(net, sync, op, case.msize, nrep,
+                          win_size=self.win_size)
         return wr.valid_times if wr.valid_times.size else wr.times
 
-    records = run_design(ExperimentDesign(n, nrep, seed=seed0),
-                         epoch_factory, measure, cases)
+
+def _campaign(seed0, n=10, nrep=60, msizes=(256, 4096), op_kw=None, p=8):
+    cases = [TestCase("allreduce", m) for m in msizes]
+    records = run_design(
+        ExperimentDesign(n, nrep, seed=seed0),
+        _SimEpochFactory(p=p, seed0=seed0, op_kw=op_kw or {}),
+        _WindowedMeasure(),
+        cases,
+        n_workers=N_WORKERS,
+    )
     return analyze_records(records)
 
 
@@ -69,7 +118,7 @@ def bench_table1_variability():
     for msize in (16, 256, 4096, 32768):
         means = []
         for epoch in range(30):
-            net = SimNet(16, seed=9000 + epoch)
+            net = SimNet(16, seed=_seed(9000 + epoch))
             sync = make_sync("hca", **SYNC_KW).synchronize(net)
             wr = run_windowed(net, sync, make_op("bcast"), msize, 100,
                               win_size=400e-6)
@@ -83,7 +132,7 @@ def bench_table1_variability():
 # --------------------------------------------------------------------- F3
 def bench_fig3_clock_drift():
     """Fig. 3: raw clock drift between a reference host and others."""
-    net = SimNet(7, seed=1)
+    net = SimNet(7, seed=_seed(1))
     rows = []
     horizon = 50.0
     net.sleep_all(horizon)
@@ -101,7 +150,7 @@ def bench_fig5_freq_estimation():
     for label, fe in (("fixed_freq", 0.0), ("estimated_freq", 4.3e-6)):
         offs = []
         for seed in range(5):
-            net = SimNet(16, seed=500 + seed,
+            net = SimNet(16, seed=_seed(500 + seed),
                          clocks=ClockParams(skew_sigma=1e-7, freq_est_sigma=fe))
             res = make_sync("netgauge").synchronize(net)
             net.sleep_all(10.0)
@@ -118,7 +167,7 @@ def bench_fig6_runtime_drift():
     rows = []
     nrep, bins = 2000, 10
     for name in ("skampi", "hca"):
-        net = SimNet(16, seed=6)
+        net = SimNet(16, seed=_seed(6))
         sync = make_sync(name, **_kw(name)).synchronize(net)
         wr = run_windowed(net, sync, make_op("bcast", autocorr=0.0), 8192,
                           nrep, win_size=300e-6)
@@ -126,7 +175,7 @@ def bench_fig6_runtime_drift():
         slope = float(np.polyfit(np.arange(bins), t, 1)[0])
         rows.append((f"fig6/{name}_first_bin", t[0] * 1e6,
                      f"slope={slope * 1e6:+.3f}us/bin last={t[-1] * 1e6:.1f}us"))
-    net = SimNet(16, seed=6)
+    net = SimNet(16, seed=_seed(6))
     br = run_barrier_timed(net, make_op("bcast", autocorr=0.0), 8192, nrep)
     t = br.times_local.reshape(bins, -1).mean(axis=1)
     slope = float(np.polyfit(np.arange(bins), t, 1)[0])
@@ -143,7 +192,7 @@ def bench_fig8_offset_after_sync():
         for name in ALGOS:
             offs = []
             for seed in range(3):
-                net = SimNet(p, seed=800 + seed)
+                net = SimNet(p, seed=_seed(800 + seed))
                 res = make_sync(name, **_kw(name)).synchronize(net)
                 offs.append(np.abs(true_offsets(net, res))[1:].max())
             rows.append((f"fig8/p{p}/{name}", float(np.median(offs)) * 1e6,
@@ -156,7 +205,7 @@ def bench_fig9_drift_over_time():
     """Fig. 9: offset 0/10/20 s after sync for every algorithm."""
     rows = []
     for name in ALGOS:
-        net = SimNet(16, seed=9)
+        net = SimNet(16, seed=_seed(9))
         res = make_sync(name, **_kw(name)).synchronize(net)
         o0 = np.abs(true_offsets(net, res))[1:].max()
         net.sleep_all(10.0)
@@ -179,7 +228,7 @@ def bench_fig10_pareto():
                 ("hca", dict(n_fitpts=200, n_exchanges=40)),
                 ("hca2", dict(n_fitpts=200, n_exchanges=40))]
     for name, kw in settings:
-        net = SimNet(32, seed=10)
+        net = SimNet(32, seed=_seed(10))
         res = make_sync(name, **kw).synchronize(net)
         net.sleep_all(5.0)
         off = np.abs(true_offsets(net, res))[1:].max()
@@ -187,7 +236,7 @@ def bench_fig10_pareto():
         rows.append((f"fig10/{tag}", res.duration * 1e6,
                      f"offset5s={off * 1e6:.2f}us msgs={res.n_messages}"))
     # barrier reference line
-    net = SimNet(32, seed=10)
+    net = SimNet(32, seed=_seed(10))
     exits = net.dissemination_barrier()
     rows.append(("fig10/barrier_skew", float(exits.max() - exits.min()) * 1e6,
                  "imbalance reference"))
@@ -198,11 +247,11 @@ def bench_fig10_pareto():
 def bench_fig11_12_barrier():
     """Figs. 11-12: barrier-based vs window-based measurement; exit skew."""
     op_kw = dict(rank_imbalance=0.01, noise_sigma=0.01, tail_prob=0.0)
-    net = SimNet(16, seed=11)
+    net = SimNet(16, seed=_seed(11))
     sync = make_sync("hca", **SYNC_KW).synchronize(net)
     wr = run_windowed(net, sync, make_op("allreduce", **op_kw), 32768, 300,
                       win_size=500e-6)
-    net2 = SimNet(16, seed=11)
+    net2 = SimNet(16, seed=_seed(11))
     br = run_barrier_timed(net2, make_op("allreduce", **op_kw), 32768, 300,
                            barrier_exit_skew=40e-6)
     rows = [
@@ -210,11 +259,11 @@ def bench_fig11_12_barrier():
         ("fig11/barrier_local_max", np.mean(br.times_local) * 1e6,
          "includes exit skew"),
     ]
-    net3 = SimNet(16, seed=12)
+    net3 = SimNet(16, seed=_seed(12))
     prof = probe_barrier_skew(net3, nrep=300, barrier_exit_skew=40e-6)
     rows.append(("fig12/mvapich_like_skew", prof.mean(axis=0).max() * 1e6,
                  "max mean exit offset"))
-    net4 = SimNet(16, seed=12)
+    net4 = SimNet(16, seed=_seed(12))
     prof = probe_barrier_skew(net4, nrep=300, use_library_barrier=False)
     rows.append(("fig12/dissemination_skew", prof.mean(axis=0).max() * 1e6,
                  "framework barrier"))
@@ -225,7 +274,7 @@ def bench_fig11_12_barrier():
 def bench_fig14_15_distributions():
     """Fig. 14: non-normal, bimodal run-time distributions. Fig. 15: sample
     size for the CLT to hold on sample means."""
-    net = SimNet(16, seed=14)
+    net = SimNet(16, seed=_seed(14))
     sync = make_sync("hca", **SYNC_KW).synchronize(net)
     wr = run_windowed(net, sync, make_op("scan"), 10000, 3000,
                       win_size=500e-6)
@@ -233,7 +282,7 @@ def bench_fig14_15_distributions():
     jb, p = jarque_bera(x)
     rows = [("fig14/scan_raw_nonnormal", x.mean() * 1e6,
              f"JB={jb:.1f} p={p:.1e} (non-normal expected)")]
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(_seed(0))
     for n in (10, 30):
         means = np.array([rng.choice(x, n).mean() for _ in range(2000)])
         jb, p = jarque_bera(means)
@@ -246,7 +295,7 @@ def bench_fig14_15_distributions():
 def bench_fig16_17_mpirun_factor():
     """Figs. 16-17: distinct launch epochs produce significantly different
     means; the distribution of epoch means is ~normal."""
-    table = _campaign(1600, n=20, nrep=80, msizes=(8192,),
+    table = _campaign(_seed(1600), n=20, nrep=80, msizes=(8192,),
                       op_kw=dict(epoch_bias_sigma=0.03))
     case = table.cases()[0]
     means = table.means(case)
@@ -264,7 +313,7 @@ def bench_fig16_17_mpirun_factor():
 def bench_fig18_autocorrelation():
     """Fig. 18: consecutive measurements are correlated; sub-sampling
     removes the correlation without moving the mean."""
-    net = SimNet(16, seed=18)
+    net = SimNet(16, seed=_seed(18))
     sync = make_sync("hca", **SYNC_KW).synchronize(net)
     wr = run_windowed(net, sync, make_op("bcast", autocorr=0.5), 1000, 2000,
                       win_size=300e-6)
@@ -284,7 +333,7 @@ def bench_fig21_22_window_size():
     """Figs. 21-22: window size vs invalid fraction and run-time stability."""
     rows = []
     for win in (30e-6, 100e-6, 300e-6, 1000e-6):
-        net = SimNet(16, seed=21)
+        net = SimNet(16, seed=_seed(21))
         sync = make_sync("hca", **SYNC_KW).synchronize(net)
         wr = run_windowed(net, sync, make_op("alltoall"), 8192, 400,
                           win_size=win)
@@ -300,8 +349,8 @@ def bench_fig27_30_comparison():
     comparison on per-epoch medians is stable and directional."""
     lib_a = dict(gamma=2.0e-6)                       # "library A"
     lib_b = dict(gamma=2.0e-6, alpha=3.6e-6)         # "library B": slower alpha
-    table_a = _campaign(2700, n=12, nrep=60, op_kw=lib_a)
-    table_b = _campaign(2900, n=12, nrep=60, op_kw=lib_b)
+    table_a = _campaign(_seed(2700), n=12, nrep=60, op_kw=lib_a)
+    table_b = _campaign(_seed(2900), n=12, nrep=60, op_kw=lib_b)
     rows = []
     # naive: compare epoch-0 means only
     for case in table_a.cases():
@@ -326,23 +375,62 @@ def bench_fig31_reproducibility():
     msize = 1024
 
     def naive_trial(seed):
-        net = SimNet(16, seed=seed)
+        net = SimNet(16, seed=_seed(seed))
         sync = make_sync("skampi").synchronize(net)
         wr = run_windowed(net, sync, make_op("bcast"), msize, 60,
                           win_size=300e-6)
         return float(np.mean(wr.times))
 
+    # naive_trial applies _seed() itself — pass the raw base seed
     naive = np.array([naive_trial(31000 + t) for t in range(6)])
     rows.append(("fig31/naive_dispersion", naive.mean() * 1e6,
                  f"max/min={naive.max() / naive.min():.3f}"))
 
     trials = []
     for t in range(4):
-        table = _campaign(32000 + 37 * t, n=8, nrep=60, msizes=(msize,))
+        table = _campaign(_seed(32000 + 37 * t), n=8, nrep=60, msizes=(msize,))
         trials.append(float(np.mean(table.means(table.cases()[0]))))
     trials = np.array(trials)
     rows.append(("fig31/method_dispersion", trials.mean() * 1e6,
                  f"max/min={trials.max() / trials.min():.3f}"))
+    return rows
+
+
+# ------------------------------------------------------------------ micro
+def bench_micro_run_windowed():
+    """Engine microbenchmark (not a paper figure): wall-clock of the
+    vectorized batch engine vs the scalar reference on the same campaign
+    (nrep=10000, p=16), plus the batched-sync speed. The ``derived`` column
+    carries the speedup so CI can track the perf trajectory."""
+    nrep, p = 10000, 16
+    rows = []
+
+    def setup():
+        net = SimNet(p, seed=_seed(42))
+        sync = make_sync("hca", **SYNC_KW).synchronize(net)
+        return net, sync
+
+    t0 = time.perf_counter()
+    net, sync = setup()
+    t_sync = time.perf_counter() - t0
+
+    timings = {}
+    for label, runner in (("scalar", run_windowed_scalar),
+                          ("batch", run_windowed)):
+        net, sync = setup()
+        op = make_op("allreduce")
+        t0 = time.perf_counter()
+        wr = runner(net, sync, op, 4096, nrep, 300e-6)
+        timings[label] = time.perf_counter() - t0
+        rows.append((f"micro/run_windowed_{label}",
+                     timings[label] / nrep * 1e6,
+                     f"wall={timings[label]:.3f}s mean={wr.valid_times.mean() * 1e6:.2f}us "
+                     f"invalid={wr.invalid_fraction * 100:.1f}%"))
+    rows.append(("micro/run_windowed_speedup",
+                 timings["scalar"] / timings["batch"],
+                 f"nrep={nrep} p={p} (x, not us)"))
+    rows.append(("micro/hca_sync_p16", t_sync * 1e6,
+                 f"batched fitpoint sweep, {SYNC_KW}"))
     return rows
 
 
@@ -414,5 +502,6 @@ ALL_BENCHES = [
     bench_fig21_22_window_size,
     bench_fig27_30_comparison,
     bench_fig31_reproducibility,
+    bench_micro_run_windowed,
     bench_real_step_functions,
 ]

@@ -20,7 +20,7 @@ from .design import (
     run_design,
 )
 from .factors import FactorSet, assert_comparable, capture_factors
-from .mpi_ops import OP_LIBRARY, CollectiveExecution, SimCollective, make_op
+from .mpi_ops import OP_LIBRARY, BatchExecution, CollectiveExecution, SimCollective, make_op
 from .simnet import ClockParams, NetParams, SimNet
 from .stats import (
     autocorr_significant_lags,
@@ -46,7 +46,7 @@ from .sync import (
     true_offsets,
 )
 from .timing import BarrierRun, probe_barrier_skew, run_barrier_timed
-from .window import WindowRun, run_windowed
+from .window import WindowRun, run_windowed, run_windowed_scalar
 
 __all__ = [
     # clocks
@@ -54,13 +54,13 @@ __all__ = [
     "IDENTITY_MODEL", "linear_fit",
     # simulation
     "SimNet", "NetParams", "ClockParams", "SimCollective",
-    "CollectiveExecution", "make_op", "OP_LIBRARY",
+    "CollectiveExecution", "BatchExecution", "make_op", "OP_LIBRARY",
     # sync
     "ALGORITHMS", "make_sync", "SkampiSync", "NetgaugeSync", "JKSync",
     "HCASync", "SyncResult", "probe_offsets", "true_offsets",
     # measurement
-    "run_windowed", "WindowRun", "run_barrier_timed", "BarrierRun",
-    "probe_barrier_skew",
+    "run_windowed", "run_windowed_scalar", "WindowRun", "run_barrier_timed",
+    "BarrierRun", "probe_barrier_skew",
     # statistics
     "tukey_filter", "wilcoxon_rank_sum", "significance_stars",
     "mean_confidence_interval", "jarque_bera", "autocorrelation",

@@ -104,6 +104,14 @@ class SimClock(Clock):
         raw = self.offset + (1.0 + self.skew) * t_true + self._random_walk(t_true)
         return raw * (1.0 + self.scale_error)
 
+    def read_affine(self, t_true):
+        """Affine part of :meth:`read` (no random-walk term); accepts
+        arrays. This is the map the vectorized network paths
+        (``pingpong_batch``, the fitpoint sweep) apply to whole true-time
+        batches — identical to :meth:`read` whenever ``rw_sigma == 0``.
+        """
+        return (self.offset + (1.0 + self.skew) * t_true) * (1.0 + self.scale_error)
+
     def true_offset_to(self, other: "SimClock", t_true: float) -> float:
         """Ground-truth offset ``self - other`` at true time ``t_true``."""
         return self.read(t_true) - other.read(t_true)

@@ -17,10 +17,19 @@ experimental factor* (§5.2). A sound benchmark therefore
 The design is engine-agnostic: an *epoch factory* builds a fresh context
 (a new :class:`~repro.core.simnet.SimNet`, or a fresh jit cache on a real
 pod) and a *measure* callable produces the raw sample.
+
+Launch epochs are independent by construction (§5.2: each is its own
+process instantiation), so :func:`run_design` can execute them across a
+``ProcessPoolExecutor`` (``n_workers > 1``). Per-epoch case orders are
+drawn up front from the design seed in the exact serial order, so the
+parallel run reproduces the serial records bit-for-bit as long as the
+factory/measure pair derives all randomness from the epoch index (which
+the simulation backends do).
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable
 
@@ -43,6 +52,8 @@ __all__ = [
 class TestCase:
     """One benchmark cell: an operation at a message size (Alg. 5's
     ``(func, msize)``; the process count is fixed per campaign)."""
+
+    __test__ = False  # tell pytest this is not a test class
 
     op: str
     msize: int
@@ -83,21 +94,43 @@ class EpochSummary:
 
 @dataclass
 class ResultTable:
-    """Distribution of per-epoch averages for every test case."""
+    """Distribution of per-epoch averages for every test case.
+
+    Lookups by case go through a grouped index built once per table state
+    (and rebuilt only if ``summaries`` grows), so repeated
+    :meth:`means`/:meth:`medians` calls stay O(group) instead of rescanning
+    every summary — this matters once campaigns reach hundreds of cells.
+    """
 
     summaries: list[EpochSummary]
+    _index: dict = field(default=None, init=False, repr=False, compare=False)
+    _indexed_len: int = field(default=-1, init=False, repr=False, compare=False)
+
+    def _grouped(self) -> dict:
+        if self._index is None or self._indexed_len != len(self.summaries):
+            groups: dict[tuple, list[EpochSummary]] = {}
+            for s in self.summaries:
+                groups.setdefault(s.case.key(), []).append(s)
+            self._index = {
+                k: (v[0].case,
+                    np.array([s.mean for s in v]),
+                    np.array([s.median for s in v]))
+                for k, v in groups.items()
+            }
+            self._indexed_len = len(self.summaries)
+        return self._index
 
     def cases(self) -> list[TestCase]:
-        seen: dict[tuple, TestCase] = {}
-        for s in self.summaries:
-            seen.setdefault(s.case.key(), s.case)
-        return [seen[k] for k in sorted(seen)]
+        idx = self._grouped()
+        return [idx[k][0] for k in sorted(idx)]
 
     def medians(self, case: TestCase) -> np.ndarray:
-        return np.array([s.median for s in self.summaries if s.case.key() == case.key()])
+        entry = self._grouped().get(case.key())
+        return entry[2].copy() if entry else np.empty(0)
 
     def means(self, case: TestCase) -> np.ndarray:
-        return np.array([s.mean for s in self.summaries if s.case.key() == case.key()])
+        entry = self._grouped().get(case.key())
+        return entry[1].copy() if entry else np.empty(0)
 
     def to_rows(self) -> list[dict]:
         return [
@@ -107,27 +140,102 @@ class ResultTable:
         ]
 
 
+def _measure_epoch(
+    epoch_factory: Callable[[int], Any],
+    measure: Callable[[Any, TestCase, int], np.ndarray],
+    epoch: int,
+    order: list[TestCase],
+    nrep: int,
+) -> list[tuple[TestCase, np.ndarray]]:
+    """One launch epoch: build a fresh context and measure every case in
+    the given (already shuffled) order. Module-level so it can cross a
+    process boundary."""
+    ctx = epoch_factory(epoch)
+    return [
+        (case, np.asarray(measure(ctx, case, nrep), dtype=np.float64))
+        for case in order
+    ]
+
+
 def run_design(
     design: ExperimentDesign,
     epoch_factory: Callable[[int], Any],
     measure: Callable[[Any, TestCase, int], np.ndarray],
     cases: Iterable[TestCase],
+    n_workers: int = 1,
 ) -> list[MeasurementRecord]:
     """Algorithm 5: ``n`` launch epochs, each measuring all cases in a
-    freshly shuffled order."""
+    freshly shuffled order.
+
+    With ``n_workers > 1`` the epochs — independent by the paper's own
+    design — run across a ``ProcessPoolExecutor``. Records come back in
+    the serial order (epoch-major, then shuffled case order) and are
+    bit-identical to a serial run whenever the factory/measure pair is
+    deterministic per epoch index. Falls back to the serial loop when the
+    callables cannot be pickled or no pool can be spawned.
+    """
     cases = list(cases)
     rng = np.random.default_rng(design.seed)
-    records: list[MeasurementRecord] = []
-    for epoch in range(design.n_launch_epochs):
-        ctx = epoch_factory(epoch)
+    orders: list[list[TestCase]] = []
+    for _ in range(design.n_launch_epochs):
         order = list(cases)
         if design.shuffle:
             perm = rng.permutation(len(order))
             order = [order[i] for i in perm]
-        for case in order:
-            times = np.asarray(measure(ctx, case, design.nrep), dtype=np.float64)
+        orders.append(order)
+
+    per_epoch: list[list[tuple[TestCase, np.ndarray]]] | None = None
+    if n_workers and n_workers > 1 and design.n_launch_epochs > 1:
+        per_epoch = _run_epochs_parallel(
+            design, epoch_factory, measure, orders, n_workers)
+    if per_epoch is None:
+        per_epoch = [
+            _measure_epoch(epoch_factory, measure, epoch, orders[epoch],
+                           design.nrep)
+            for epoch in range(design.n_launch_epochs)
+        ]
+
+    records: list[MeasurementRecord] = []
+    for epoch, results in enumerate(per_epoch):
+        for case, times in results:
             records.append(MeasurementRecord(case=case, epoch=epoch, times=times))
     return records
+
+
+def _run_epochs_parallel(design, epoch_factory, measure, orders, n_workers):
+    """Fan the launch epochs out over processes; ``None`` on any setup
+    failure (unpicklable callables, no fork/spawn support) so the caller
+    can run serially instead."""
+    import concurrent.futures as cf
+    import multiprocessing as mp
+    import pickle
+
+    try:
+        pickle.dumps((epoch_factory, measure))
+    except Exception:
+        warnings.warn(
+            "run_design(n_workers>1): epoch_factory/measure not picklable; "
+            "running epochs serially", RuntimeWarning, stacklevel=3)
+        return None
+    mp_ctx = None
+    if "fork" in mp.get_all_start_methods():
+        mp_ctx = mp.get_context("fork")
+    try:
+        with cf.ProcessPoolExecutor(
+            max_workers=min(n_workers, design.n_launch_epochs),
+            mp_context=mp_ctx,
+        ) as pool:
+            futures = [
+                pool.submit(_measure_epoch, epoch_factory, measure, epoch,
+                            orders[epoch], design.nrep)
+                for epoch in range(design.n_launch_epochs)
+            ]
+            return [f.result() for f in futures]
+    except (OSError, cf.process.BrokenProcessPool, pickle.PicklingError) as e:
+        warnings.warn(
+            f"run_design(n_workers>1): process pool failed ({e!r}); "
+            "running epochs serially", RuntimeWarning, stacklevel=3)
+        return None
 
 
 def analyze_records(

@@ -17,17 +17,35 @@ the statistical structure the paper reports:
 
 The default constants give a few tens of microseconds for small messages at
 p = 16, matching Table 1 / Fig. 14 magnitudes.
+
+Two execution paths share the same cost model:
+
+  * :meth:`SimCollective.execute` — the scalar semantic reference, one
+    simulated call per invocation;
+  * :meth:`SimCollective.execute_batch` — the vectorized engine: samples
+    all ``nrep`` durations at once (:meth:`SimCollective.sample_durations`)
+    and rolls the per-rank start/end recurrence forward in closed form.
+    RNG draws are batched per quantity instead of interleaved per call, so
+    a batch is statistically — not bit-wise — identical to ``nrep`` scalar
+    calls with the same seed (``tests/test_batch_equivalence.py``).
 """
 
 from __future__ import annotations
 
+import weakref
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from .simnet import SimNet
 
-__all__ = ["SimCollective", "CollectiveExecution", "OP_LIBRARY", "make_op"]
+__all__ = [
+    "SimCollective",
+    "CollectiveExecution",
+    "BatchExecution",
+    "OP_LIBRARY",
+    "make_op",
+]
 
 
 @dataclass
@@ -39,11 +57,61 @@ class CollectiveExecution:
 
 
 @dataclass
+class BatchExecution:
+    """Per-rank true start/finish times of ``nrep`` consecutive calls.
+
+    ``start_true``/``end_true`` have shape ``(nrep, p)``; ``durations`` is
+    the common (synchronized-start) duration of each call, shape ``(nrep,)``.
+    """
+
+    start_true: np.ndarray
+    end_true: np.ndarray
+    durations: np.ndarray
+
+
+def _ar1_filter(eps: np.ndarray, coeff: float, state: float) -> np.ndarray:
+    """Vectorized AR(1) recurrence ``s_i = coeff * s_{i-1} + eps_i``.
+
+    Uses the exponential-decay closed form ``s_j = a^{j+1} s_{-1} +
+    sum_k a^{j-k} eps_k`` evaluated in chunks small enough that the
+    ``a^{-k}`` rescaling cannot overflow, so it is numerically equivalent
+    to the scalar loop for any ``|coeff| < 1``.
+    """
+    n = eps.size
+    if n == 0:
+        return eps.copy()
+    a = float(coeff)
+    if a == 0.0:
+        return eps.copy()
+    if abs(a) >= 1.0:  # non-stationary config: fall back to the plain loop
+        out = np.empty(n)
+        s = state
+        for i in range(n):
+            s = a * s + eps[i]
+            out[i] = s
+        return out
+    # chunk so that |a|^-(chunk-1) stays far below float64 overflow
+    chunk = max(1, min(n, int(500.0 / max(1e-12, -np.log(abs(a))))))
+    out = np.empty(n)
+    carry = state
+    for lo in range(0, n, chunk):
+        e = eps[lo:lo + chunk]
+        m = e.size
+        decay = a ** np.arange(m)                     # a^j
+        s = decay * np.cumsum(e / decay) + carry * a * decay
+        out[lo:lo + m] = s
+        carry = s[-1]
+    return out
+
+
+@dataclass
 class SimCollective:
     """Cost model ``T(p, m) = alpha * ceil(log2 p) + beta * m + gamma``.
 
     ``epoch_bias`` models the launch-epoch factor (§5.2): a per-process-
     instantiation multiplicative offset, sampled once per (net, op) pair.
+    The cache is keyed by the :class:`SimNet` object itself (weakly), so a
+    garbage-collected epoch can never alias a new one through ``id`` reuse.
     """
 
     name: str = "allreduce"
@@ -61,20 +129,20 @@ class SimCollective:
     epoch_bias_sigma: float = 0.02  # per-launch-epoch mean shift (§5.2)
     warm_cache_discount: float = 0.12  # §5.8: warm buffers run faster
     _ar_state: float = field(default=0.0, init=False, repr=False)
-    _epoch_bias: dict = field(default_factory=dict, init=False, repr=False)
+    _epoch_bias: "weakref.WeakKeyDictionary[SimNet, float]" = field(
+        default_factory=weakref.WeakKeyDictionary, init=False, repr=False)
 
     def base_time(self, p: int, msize: int) -> float:
         levels = max(1, int(np.ceil(np.log2(max(2, p)))))
         return self.alpha * levels + self.beta * self.msize_factor * msize + self.gamma
 
     def _bias_for(self, net: SimNet) -> float:
-        key = id(net)
-        if key not in self._epoch_bias:
+        bias = self._epoch_bias.get(net)
+        if bias is None:
             rng = np.random.default_rng(net.rng.integers(2**31))
-            self._epoch_bias[key] = float(
-                np.exp(rng.normal(0.0, self.epoch_bias_sigma))
-            )
-        return self._epoch_bias[key]
+            bias = float(np.exp(rng.normal(0.0, self.epoch_bias_sigma)))
+            self._epoch_bias[net] = bias
+        return bias
 
     def sample_duration(self, net: SimNet, p: int, msize: int,
                         warm: bool = True) -> float:
@@ -91,6 +159,34 @@ class SimCollective:
             t *= 1.0 + self.tail_shift * float(rng.uniform(0.7, 1.3))
         if rng.random() < self.spike_prob:
             t *= self.spike_scale
+        return t
+
+    def sample_durations(self, net: SimNet, p: int, msize: int, nrep: int,
+                         warm: bool = True) -> np.ndarray:
+        """Vectorized :meth:`sample_duration`: ``nrep`` consecutive common
+        durations with the same AR(1)/bimodal/spike structure.
+
+        RNG draws are batched per quantity (noise, tail, tail magnitude,
+        spike), so the stream order differs from ``nrep`` scalar calls; the
+        marginal and joint (autocorrelation) distributions are identical.
+        The AR(1) state is carried in and out, so mixing scalar and batch
+        calls keeps the lag-1 correlation across the boundary.
+        """
+        if nrep <= 0:
+            return np.empty(0)
+        t0 = self.base_time(p, msize) * self._bias_for(net)
+        if not warm:
+            t0 *= 1.0 + self.warm_cache_discount
+        rng = net.rng
+        eps = rng.normal(0.0, self.noise_sigma, size=nrep)
+        s = _ar1_filter(eps, self.autocorr, self._ar_state)
+        self._ar_state = float(s[-1])
+        t = t0 * np.exp(s)
+        tails = rng.random(nrep) < self.tail_prob
+        tail_mag = 1.0 + self.tail_shift * rng.uniform(0.7, 1.3, size=nrep)
+        t = np.where(tails, t * tail_mag, t)
+        spikes = rng.random(nrep) < self.spike_prob
+        t = np.where(spikes, t * self.spike_scale, t)
         return t
 
     def execute(self, net: SimNet, msize: int, ranks: list[int] | None = None,
@@ -112,6 +208,59 @@ class SimCollective:
         for i, r in enumerate(ranks):
             net.t[r] = end[i]
         return CollectiveExecution(start_true=start, end_true=end)
+
+    def execute_batch(
+        self,
+        net: SimNet,
+        msize: int,
+        nrep: int,
+        ranks: list[int] | None = None,
+        warm: bool = True,
+        min_start_true: np.ndarray | None = None,
+    ) -> BatchExecution:
+        """Run ``nrep`` consecutive collective calls in closed form.
+
+        Semantically equivalent to ``nrep`` calls of :meth:`execute` (same
+        synchronizing-collective entry rule), optionally with a per-call
+        per-rank earliest start ``min_start_true`` of shape ``(nrep, p)``
+        (the window scheme's deadlines in *true* time): rank ``r`` enters
+        call ``i`` at ``max(min_start_true[i, r], end[i-1, r])``.
+
+        The cross-call recurrence ``all_in_i = max(deadline_max_i,
+        all_in_{i-1} + e_{i-1})`` (``e_i`` = duration times the slowest
+        rank's imbalance factor) is solved with a prefix-sum +
+        running-maximum identity, so no Python loop over ``nrep`` remains.
+        """
+        ranks = list(range(net.p)) if ranks is None else ranks
+        p = len(ranks)
+        if nrep <= 0:
+            empty = np.empty((0, p))
+            return BatchExecution(empty, empty.copy(), np.empty(0))
+        dur = self.sample_durations(net, p, msize, nrep, warm)
+        imb = net.rng.normal(0.0, self.rank_imbalance, size=(nrep, p))
+        m = np.maximum(0.25, 1.0 + imb)
+        span = dur[:, None] * m          # per-rank duration after all-in
+        e = span.max(axis=1)             # slowest rank per call
+        t0 = net.t[ranks].copy()
+        if min_start_true is None:
+            dmax = np.full(nrep, -np.inf)
+        else:
+            dmax = np.max(min_start_true, axis=1)
+        # all_in_i = max(dmax_i, all_in_{i-1} + e_{i-1}) with
+        # all_in_{-1} + e_{-1} := max(t0).  Unrolled:
+        #   all_in_i = C_i + max(max_r t0_r, max_{j<=i} (dmax_j - C_j))
+        # where C_i = sum_{k<i} e_k.
+        C = np.concatenate(([0.0], np.cumsum(e[:-1])))
+        all_in = C + np.maximum(
+            float(np.max(t0)), np.maximum.accumulate(dmax - C))
+        end = all_in[:, None] + span
+        prev_end = np.vstack((t0[None, :], end[:-1]))
+        if min_start_true is None:
+            start = prev_end
+        else:
+            start = np.maximum(min_start_true, prev_end)
+        net.t[ranks] = end[-1]
+        return BatchExecution(start_true=start, end_true=end, durations=dur)
 
 
 def make_op(name: str, **overrides) -> SimCollective:

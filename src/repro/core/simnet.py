@@ -207,8 +207,7 @@ class SimNet:
         self.msg_count += 2 * n
         c = self.clocks[client]
         s = self.clocks[server]
-        to_local = lambda clk, t: (clk.offset + (1.0 + clk.skew) * t) * (1.0 + clk.scale_error)
-        return (to_local(c, send), to_local(s, srv), to_local(c, recv))
+        return (c.read_affine(send), s.read_affine(srv), c.read_affine(recv))
 
     # -------------------------------------------------------------- barriers
     def dissemination_barrier(self, ranks: list[int] | None = None) -> np.ndarray:
@@ -218,7 +217,30 @@ class SimNet:
         ``(i + 2^k) mod p`` and proceeds once it heard from
         ``(i - 2^k) mod p``. Returns the per-rank *true* exit times
         (simulator-side; experiments read clocks separately).
+
+        Each round is evaluated as one latency-vector update (``np.roll``
+        of the pre-round send times) instead of a per-rank Python loop;
+        the per-round arrival rule is unchanged.
         """
+        ranks = list(range(self.p)) if ranks is None else ranks
+        n = len(ranks)
+        oh = self.net.proc_overhead
+        t = self.t[ranks]
+        k = 1
+        while k < n:
+            send_time = t + oh
+            # rotate right by k: receiver i hears from (i - k) mod n
+            rotated = np.concatenate((send_time[n - k:], send_time[:n - k]))
+            arrival = rotated + self._latencies(n)
+            t = np.maximum(t + oh, arrival)
+            self.msg_count += n
+            k *= 2
+        self.t[ranks] = t
+        return t.copy()
+
+    def _dissemination_barrier_scalar(self, ranks: list[int] | None = None) -> np.ndarray:
+        """Per-rank scalar reference of :meth:`dissemination_barrier`,
+        kept for the scalar<->vectorized equivalence tests."""
         ranks = list(range(self.p)) if ranks is None else ranks
         n = len(ranks)
         idx = {r: i for i, r in enumerate(ranks)}
@@ -244,10 +266,9 @@ class SimNet:
         out = self.dissemination_barrier(ranks)
         if exit_skew > 0.0:
             n = len(ranks)
-            for i, r in enumerate(ranks):
-                bias = exit_skew * i / max(1, n - 1)
-                bias += float(self.rng.normal(0.0, 0.05 * exit_skew))
-                self.t[r] += max(0.0, bias)
+            bias = exit_skew * np.arange(n) / max(1, n - 1)
+            bias = bias + self.rng.normal(0.0, 0.05 * exit_skew, size=n)
+            self.t[ranks] += np.maximum(0.0, bias)
         return self.t[ranks].copy()
 
     # ------------------------------------------------------------- utilities

@@ -9,7 +9,7 @@ from .base import (
     true_offsets,
 )
 from .hca import HCASync, learn_model_hca
-from .jk import JKSync, collect_fitpoint
+from .jk import JKSync, collect_fitpoint, collect_fitpoints_batch
 from .netgauge import NetgaugeSync, compute_offset_minrtt
 from .skampi import SkampiSync
 
@@ -26,6 +26,7 @@ __all__ = [
     "SkampiSync",
     "learn_model_hca",
     "collect_fitpoint",
+    "collect_fitpoints_batch",
     "compute_offset_minrtt",
     "ALGORITHMS",
     "make_sync",

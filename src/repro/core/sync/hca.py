@@ -32,7 +32,7 @@ import numpy as np
 from ..clocks import LinearModel, linear_fit
 from ..simnet import SimNet
 from .base import ClockSync, SyncResult, compute_rtt, skampi_pingpong_adjusted
-from .jk import collect_fitpoint
+from .jk import collect_fitpoints_batch
 
 __all__ = ["HCASync", "learn_model_hca"]
 
@@ -47,16 +47,16 @@ def learn_model_hca(
     initial_times: list[float],
 ) -> LinearModel:
     """LEARN_MODEL_HCA (Alg. 4): drift model of ``client`` relative to
-    ``ref`` on *adjusted* clocks, via linear regression over fitpoints."""
-    xs = np.empty(n_fitpts)
-    ys = np.empty(n_fitpts)
-    for idx in range(n_fitpts):
-        x, y = collect_fitpoint(
-            net, client, ref, rtt, n_exchanges,
-            init_client=initial_times[client], init_ref=initial_times[ref],
-        )
-        xs[idx] = x
-        ys[idx] = y
+    ``ref`` on *adjusted* clocks, via linear regression over fitpoints.
+
+    The ``n_fitpts x n_exchanges`` ping-pong sweep runs through the
+    vectorized engine (:func:`repro.core.sync.jk.collect_fitpoints_batch`)
+    in one shot — the pair's fitpoints are back-to-back in Alg. 4, so the
+    merged sweep has the same timeline as per-fitpoint round-trips."""
+    xs, ys = collect_fitpoints_batch(
+        net, client, ref, rtt, n_fitpts, n_exchanges,
+        initial_times=initial_times,
+    )
     return linear_fit(xs, ys)
 
 

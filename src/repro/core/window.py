@@ -13,6 +13,24 @@ exactly as SKaMPI/NBCBench record them (Algs. 9/13):
 Measurements with either flag set on any rank are *invalid* and discarded
 (Figs. 21-22 study the trade-off between window size and the fraction of
 discarded measurements).
+
+Two engines compute the same campaign:
+
+  * ``engine="scalar"`` — the semantic reference: a per-observation,
+    per-rank Python loop of busy-waits and scalar clock reads;
+  * ``engine="batch"`` (default where applicable) — both the hardware
+    clock (:class:`~repro.core.clocks.SimClock` with ``rw_sigma == 0``)
+    and the learned sync model are affine, so every local↔global
+    conversion — deadlines, START_LATE and TOOK_TOO_LONG flags, global
+    start/end estimates — is evaluated in closed form over all ``nrep``
+    windows at once, on top of
+    :meth:`~repro.core.mpi_ops.SimCollective.execute_batch`.
+
+``engine="auto"`` picks the batch engine whenever all participating
+clocks are drift-affine (no random-walk component) and falls back to the
+scalar reference otherwise.  The two engines are bit-identical given
+identical noise samples and statistically indistinguishable under a live
+RNG (``tests/test_batch_equivalence.py``).
 """
 
 from __future__ import annotations
@@ -25,7 +43,7 @@ from .mpi_ops import SimCollective
 from .simnet import SimNet
 from .sync.base import SyncResult
 
-__all__ = ["WindowRun", "run_windowed"]
+__all__ = ["WindowRun", "run_windowed", "run_windowed_scalar"]
 
 START_LATE = 1
 TOOK_TOO_LONG = 2
@@ -55,6 +73,12 @@ class WindowRun:
         return float(np.mean(~self.valid)) if self.times.size else 0.0
 
 
+def _clocks_affine(net: SimNet, ranks: list[int]) -> bool:
+    """True when every participating clock is a pure affine map of true
+    time (no random-walk state), so deadline conversion has a closed form."""
+    return all(net.clocks[r].rw_sigma <= 0.0 for r in ranks)
+
+
 def run_windowed(
     net: SimNet,
     sync: SyncResult,
@@ -63,17 +87,91 @@ def run_windowed(
     nrep: int,
     win_size: float,
     ranks: list[int] | None = None,
+    engine: str = "auto",
 ) -> WindowRun:
     """Measure ``nrep`` calls of ``op`` under window-based synchronization.
 
     Completion time per observation follows §3.2.2 (global times):
     ``max_r global(end_r) - min_r global(start_r)``.
+
+    ``engine`` is ``"auto"`` (batch when all clocks are affine),
+    ``"batch"`` or ``"scalar"``.
     """
     ranks = list(range(net.p)) if ranks is None else ranks
+    if engine == "auto":
+        engine = "batch" if _clocks_affine(net, ranks) else "scalar"
+    if engine == "scalar":
+        return run_windowed_scalar(net, sync, op, msize, nrep, win_size, ranks)
+    if engine != "batch":
+        raise ValueError(f"unknown engine {engine!r}; use auto|batch|scalar")
+    if not _clocks_affine(net, ranks):
+        raise ValueError(
+            "engine='batch' requires affine clocks (rw_sigma == 0); "
+            "use engine='scalar' for random-walk clocks")
     p = len(ranks)
 
     # Root picks a start time in the (global-clock) future and broadcasts it
     # (Alg. 2 line 8). Give every rank a slack window to reach the loop.
+    g_now = max(sync.global_time(net, r) for r in ranks)
+    start_time = g_now + win_size
+    targets = start_time + win_size * np.arange(nrep)
+
+    # Closed-form local<->global conversion: the window deadline in *true*
+    # time is affine in the global target, composed from the sync model's
+    # denormalize and the (affine) clock inverse.
+    deadline_true = np.empty((nrep, p))
+    for i, r in enumerate(ranks):
+        deadline_local = sync.models[r].denormalize(targets) + sync.initial_times[r]
+        deadline_true[:, i] = net.true_time_at_local(r, deadline_local)
+
+    t0 = net.t[ranks].copy()
+    ex = op.execute_batch(net, msize, nrep, ranks,
+                          min_start_true=deadline_true)
+    prev_end = np.vstack((t0[None, :], ex.end_true[:-1]))
+    # wait_until_local() reports START_LATE when the deadline is <= the
+    # rank's current time (i.e. <= its previous finish).
+    late = deadline_true <= prev_end
+
+    sg = np.empty((nrep, p))
+    eg = np.empty((nrep, p))
+    for i, r in enumerate(ranks):
+        clk, init = net.clocks[r], sync.initial_times[r]
+        model = sync.models[r]
+        sg[:, i] = model.normalize(clk.read(ex.start_true[:, i]) - init)
+        eg[:, i] = model.normalize(clk.read(ex.end_true[:, i]) - init)
+    took = eg > (targets + win_size)[:, None]
+
+    errors = np.zeros(nrep, dtype=np.int64)
+    errors[late.any(axis=1)] |= START_LATE
+    errors[took.any(axis=1)] |= TOOK_TOO_LONG
+    times = eg.max(axis=1) - sg.min(axis=1)
+
+    return WindowRun(
+        times=times, errors=errors,
+        start_global_est=sg, end_global_est=eg,
+        start_true=ex.start_true, end_true=ex.end_true,
+    )
+
+
+def run_windowed_scalar(
+    net: SimNet,
+    sync: SyncResult,
+    op: SimCollective,
+    msize: int,
+    nrep: int,
+    win_size: float,
+    ranks: list[int] | None = None,
+) -> WindowRun:
+    """Scalar semantic reference for :func:`run_windowed`.
+
+    One busy-wait and one clock read per (observation, rank) — exactly the
+    per-measurement control flow of Alg. 9/13. Kept verbatim so the batch
+    engine has an executable specification to be verified against, and as
+    the only valid engine for non-affine (random-walk) clocks.
+    """
+    ranks = list(range(net.p)) if ranks is None else ranks
+    p = len(ranks)
+
     g_now = max(sync.global_time(net, r) for r in ranks)
     start_time = g_now + win_size
 

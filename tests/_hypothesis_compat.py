@@ -1,0 +1,46 @@
+"""Optional-dependency shim for ``hypothesis``.
+
+``from _hypothesis_compat import given, settings, st`` yields the real
+hypothesis API when it is installed. When it is not, the property-based
+tests decorated with ``@given`` collect as skipped placeholders instead of
+hard-failing the whole test module at import time; every non-property test
+in the module still runs.
+"""
+
+HAVE_HYPOTHESIS = True
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any attribute/call chain used to build strategies."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        def decorate(fn):
+            @pytest.mark.skip(reason="optional dep 'hypothesis' not installed")
+            def placeholder():
+                pass
+
+            placeholder.__name__ = getattr(fn, "__name__", "test_property")
+            placeholder.__doc__ = getattr(fn, "__doc__", None)
+            return placeholder
+
+        return decorate
+
+    def settings(*args, **kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate

@@ -1,0 +1,348 @@
+"""Scalar <-> vectorized engine equivalence (the batch-engine contract).
+
+The vectorized measurement engine must be indistinguishable from the
+scalar semantic reference:
+
+  * *exactly* (up to float-associativity noise, ~1e-12 s on second-scale
+    timelines) when the noise samples are deterministic, which isolates
+    the closed-form window scheduling and clock conversion;
+  * *statistically* (Wilcoxon on the measured distributions) when the RNG
+    is live, because batched draws consume the stream in a different order
+    than interleaved scalar draws.
+
+Also covers: epoch-parallel ``run_design`` reproducing serial records
+bit-for-bit, the weakref epoch-bias cache, and the grouped ``ResultTable``
+index.
+"""
+
+import gc
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EpochSummary,
+    ExperimentDesign,
+    ResultTable,
+    SimNet,
+    TestCase,
+    make_op,
+    make_sync,
+    run_design,
+    run_windowed,
+    wilcoxon_rank_sum,
+)
+from repro.core.design import analyze_records
+from repro.core.mpi_ops import _ar1_filter
+from repro.core.window import run_windowed_scalar
+
+NOISE_FREE = dict(noise_sigma=0.0, tail_prob=0.0, spike_prob=0.0,
+                  rank_imbalance=0.0, epoch_bias_sigma=0.0, autocorr=0.0)
+SYNC_KW = dict(n_fitpts=100, n_exchanges=20)
+
+
+def _synced(seed, p=8):
+    net = SimNet(p, seed=seed)
+    sync = make_sync("hca", **SYNC_KW).synchronize(net)
+    return net, sync
+
+
+# ---------------------------------------------------------------------------
+# AR(1) closed form
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("coeff", [0.0, 0.35, 0.9, -0.5, 0.999])
+def test_ar1_filter_matches_scalar_recurrence(coeff):
+    rng = np.random.default_rng(3)
+    eps = rng.normal(0.0, 0.04, size=4000)
+    state = 0.7
+    ref = np.empty(eps.size)
+    s = state
+    for i in range(eps.size):
+        s = coeff * s + eps[i]
+        ref[i] = s
+    out = _ar1_filter(eps, coeff, state)
+    np.testing.assert_allclose(out, ref, rtol=1e-10, atol=1e-14)
+
+
+# ---------------------------------------------------------------------------
+# run_windowed: batch vs scalar
+# ---------------------------------------------------------------------------
+
+def test_windowed_batch_exact_when_noise_free():
+    """With deterministic noise the two engines compute the *same campaign*:
+    same times, same error flags, same ground-truth timelines, same final
+    simulator state — the closed-form scheduling is exact."""
+    op_a = make_op("allreduce", **NOISE_FREE)
+    op_b = make_op("allreduce", **NOISE_FREE)
+    net_a, sync_a = _synced(5, p=16)
+    net_b, sync_b = _synced(5, p=16)
+    a = run_windowed_scalar(net_a, sync_a, op_a, 4096, 400, 300e-6)
+    b = run_windowed(net_b, sync_b, op_b, 4096, 400, 300e-6, engine="batch")
+    np.testing.assert_allclose(a.times, b.times, rtol=0, atol=1e-12)
+    assert np.array_equal(a.errors, b.errors)
+    np.testing.assert_allclose(a.start_true, b.start_true, rtol=0, atol=1e-12)
+    np.testing.assert_allclose(a.end_true, b.end_true, rtol=0, atol=1e-12)
+    np.testing.assert_allclose(a.start_global_est, b.start_global_est,
+                               rtol=0, atol=1e-12)
+    np.testing.assert_allclose(net_a.t, net_b.t, rtol=0, atol=1e-12)
+
+
+def test_windowed_batch_exact_with_tight_windows():
+    """Noise-free but with a window too small for the op: both engines must
+    flag the same observations START_LATE/TOOK_TOO_LONG."""
+    op = make_op("alltoall", **NOISE_FREE)
+    base = op.base_time(16, 32768)
+    for win in (0.9 * base, 1.2 * base, 3.0 * base):
+        net_a, sync_a = _synced(11, p=16)
+        net_b, sync_b = _synced(11, p=16)
+        a = run_windowed_scalar(net_a, sync_a, make_op("alltoall", **NOISE_FREE),
+                                32768, 200, win)
+        b = run_windowed(net_b, sync_b, make_op("alltoall", **NOISE_FREE),
+                         32768, 200, win, engine="batch")
+        assert np.array_equal(a.errors, b.errors), f"win={win}"
+        np.testing.assert_allclose(a.times, b.times, rtol=0, atol=1e-12)
+
+
+def test_windowed_batch_matches_scalar_statistically():
+    """Live RNG: the batched draws reorder the stream, so the campaigns are
+    different samples of the same distribution — Wilcoxon must not tell
+    them apart, and the means must agree to ~1%."""
+    net_a, sync_a = _synced(7, p=16)
+    net_b, sync_b = _synced(7, p=16)
+    a = run_windowed_scalar(net_a, sync_a, make_op("allreduce"), 4096, 3000,
+                            300e-6)
+    b = run_windowed(net_b, sync_b, make_op("allreduce"), 4096, 3000,
+                     300e-6, engine="batch")
+    res = wilcoxon_rank_sum(a.valid_times, b.valid_times)
+    assert res.p_value > 0.05, res.p_value
+    assert abs(a.valid_times.mean() - b.valid_times.mean()) \
+        < 0.02 * a.valid_times.mean()
+
+
+def test_windowed_batch_invalid_fraction_tracks_scalar():
+    """Fig. 21 regime (window barely fits the op): both engines must see
+    comparable invalid fractions at every window size."""
+    for win, tol in ((40e-6, 0.10), (100e-6, 0.05)):
+        net_a, sync_a = _synced(1, p=16)
+        net_b, sync_b = _synced(1, p=16)
+        a = run_windowed_scalar(net_a, sync_a, make_op("alltoall"), 8192,
+                                1500, win)
+        b = run_windowed(net_b, sync_b, make_op("alltoall"), 8192,
+                         1500, win, engine="batch")
+        assert abs(a.invalid_fraction - b.invalid_fraction) < tol, win
+
+
+def test_windowed_engine_dispatch():
+    net, sync = _synced(2, p=4)
+    wr = run_windowed(net, sync, make_op("bcast"), 256, 50, 300e-6)
+    assert wr.times.size == 50          # auto -> batch on affine clocks
+    with pytest.raises(ValueError):
+        run_windowed(net, sync, make_op("bcast"), 256, 10, 300e-6,
+                     engine="nope")
+
+
+def test_windowed_scalar_engine_used_for_random_walk_clocks():
+    from repro.core import ClockParams
+    net = SimNet(4, seed=3, clocks=ClockParams(rw_sigma=1e-7))
+    sync = make_sync("hca", **SYNC_KW).synchronize(net)
+    wr = run_windowed(net, sync, make_op("bcast"), 256, 30, 400e-6)
+    assert wr.times.size == 30          # auto -> scalar, no crash
+    with pytest.raises(ValueError):
+        run_windowed(net, sync, make_op("bcast"), 256, 10, 400e-6,
+                     engine="batch")
+
+
+# ---------------------------------------------------------------------------
+# execute vs execute_batch
+# ---------------------------------------------------------------------------
+
+def test_execute_batch_exact_when_noise_free():
+    net_a = SimNet(8, seed=9)
+    net_b = SimNet(8, seed=9)
+    op_a = make_op("scan", **NOISE_FREE)
+    op_b = make_op("scan", **NOISE_FREE)
+    ends_a = []
+    for _ in range(50):
+        ends_a.append(op_a.execute(net_a, 1024).end_true)
+    ex = op_b.execute_batch(net_b, 1024, 50)
+    np.testing.assert_allclose(np.asarray(ends_a), ex.end_true,
+                               rtol=0, atol=1e-12)
+    np.testing.assert_allclose(net_a.t, net_b.t, rtol=0, atol=1e-12)
+
+
+def test_execute_batch_matches_execute_statistically():
+    net_a = SimNet(8, seed=4)
+    net_b = SimNet(8, seed=4)
+    op_a = make_op("allreduce")
+    op_b = make_op("allreduce")
+    dur_a = np.empty(2500)
+    for i in range(2500):
+        start = net_a.t.copy()
+        ex = op_a.execute(net_a, 4096)
+        dur_a[i] = np.max(ex.end_true) - np.max(start)
+    ex_b = op_b.execute_batch(net_b, 4096, 2500)
+    dur_b = np.max(ex_b.end_true, axis=1) - np.max(ex_b.start_true, axis=1)
+    res = wilcoxon_rank_sum(dur_a, dur_b)
+    assert res.p_value > 0.05, res.p_value
+    assert abs(dur_a.mean() - dur_b.mean()) < 0.02 * dur_a.mean()
+
+
+def test_execute_batch_respects_ar_state_across_boundary():
+    """AR(1) state carries across scalar->batch boundaries, so lag-1
+    correlation survives mixing the two paths."""
+    net = SimNet(4, seed=8)
+    op = make_op("bcast", autocorr=0.9, tail_prob=0.0, spike_prob=0.0)
+    op.execute(net, 256)
+    state_before = op._ar_state
+    op.execute_batch(net, 256, 10)
+    assert op._ar_state != state_before  # advanced, not reset
+
+
+# ---------------------------------------------------------------------------
+# barriers
+# ---------------------------------------------------------------------------
+
+def test_dissemination_barrier_vectorized_matches_scalar():
+    """Exit-skew distributions of the vectorized and per-rank scalar
+    barrier are statistically indistinguishable."""
+    net_a = SimNet(16, seed=3)
+    net_b = SimNet(16, seed=3)
+    skew_a = np.empty(400)
+    skew_b = np.empty(400)
+    for i in range(400):
+        ea = net_a._dissemination_barrier_scalar()
+        eb = net_b.dissemination_barrier()
+        skew_a[i] = ea.max() - ea.min()
+        skew_b[i] = eb.max() - eb.min()
+        net_a.sleep_all(5e-6)
+        net_b.sleep_all(5e-6)
+    res = wilcoxon_rank_sum(skew_a, skew_b)
+    assert res.p_value > 0.05, res.p_value
+    # medians, not means: the OS-noise spike tail makes means of 400
+    # samples swing by more than the engines differ
+    med_a, med_b = np.median(skew_a), np.median(skew_b)
+    assert abs(med_a - med_b) < 0.1 * med_a
+
+
+def test_library_barrier_exit_skew_profile_preserved():
+    """The vectorized library barrier still produces the linear-in-rank
+    MVAPICH-like exit profile of Fig. 12."""
+    net = SimNet(16, seed=12)
+    prof = np.empty((300, 16))
+    for i in range(300):
+        e = net.library_barrier(exit_skew=40e-6)
+        prof[i] = e - e.min()
+        net.sleep_all(5e-6)
+    means = prof.mean(axis=0)
+    assert means[1:].max() > 20e-6
+    # increasing trend in rank (compare first and last third)
+    assert means[-5:].mean() > means[:5].mean()
+
+
+# ---------------------------------------------------------------------------
+# epoch-parallel run_design
+# ---------------------------------------------------------------------------
+
+class _EpochFactory:
+    """Top-level (picklable) simulated epoch factory."""
+
+    def __init__(self, seed0):
+        self.seed0 = seed0
+
+    def __call__(self, epoch):
+        net = SimNet(4, seed=self.seed0 + 1000 * epoch)
+        sync = make_sync("hca", n_fitpts=30, n_exchanges=10).synchronize(net)
+        return (net, sync, make_op("allreduce"))
+
+
+class _Measure:
+    def __call__(self, ctx, case, nrep):
+        net, sync, op = ctx
+        wr = run_windowed(net, sync, op, case.msize, nrep, win_size=400e-6)
+        return wr.times
+
+
+def test_epoch_parallel_run_design_reproduces_serial():
+    design = ExperimentDesign(n_launch_epochs=6, nrep=25, seed=3)
+    cases = [TestCase("allreduce", m) for m in (256, 4096)]
+    serial = run_design(design, _EpochFactory(50), _Measure(), cases,
+                        n_workers=1)
+    parallel = run_design(design, _EpochFactory(50), _Measure(), cases,
+                          n_workers=2)
+    assert len(serial) == len(parallel) == 12
+    for a, b in zip(serial, parallel):
+        assert a.case == b.case
+        assert a.epoch == b.epoch
+        assert np.array_equal(a.times, b.times)
+
+
+def test_run_design_unpicklable_falls_back_to_serial():
+    design = ExperimentDesign(n_launch_epochs=2, nrep=5, seed=0)
+    cases = [TestCase("allreduce", 256)]
+    factory = _EpochFactory(10)
+    measure = lambda ctx, case, nrep: _Measure()(ctx, case, nrep)  # noqa: E731
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        records = run_design(design, factory, measure, cases, n_workers=2)
+    assert len(records) == 2
+    assert any("not picklable" in str(w.message) for w in caught)
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+# ---------------------------------------------------------------------------
+
+def test_epoch_bias_cache_is_weak():
+    """The per-epoch bias cache must not alias a new SimNet that reuses a
+    dead net's memory address (the old ``id(net)`` bug)."""
+    op = make_op("allreduce")
+    net = SimNet(2, seed=0)
+    op._bias_for(net)
+    assert len(op._epoch_bias) == 1
+    del net
+    gc.collect()
+    assert len(op._epoch_bias) == 0
+    # distinct live nets get distinct cache slots
+    nets = [SimNet(2, seed=s) for s in range(3)]
+    biases = {op._bias_for(n) for n in nets}
+    assert len(op._epoch_bias) == 3
+    assert len(biases) == 3  # a.s. distinct draws
+
+
+def test_result_table_grouped_index_matches_scan():
+    cases = [TestCase("a", 1), TestCase("b", 2)]
+    summaries = []
+    for epoch in range(4):
+        for c in cases:
+            summaries.append(EpochSummary(
+                case=c, epoch=epoch, mean=epoch + hash(c.op) % 7,
+                median=epoch * 2.0, n_kept=10, n_raw=10))
+    table = ResultTable(summaries=summaries)
+    for c in cases:
+        want_means = [s.mean for s in summaries if s.case.key() == c.key()]
+        want_meds = [s.median for s in summaries if s.case.key() == c.key()]
+        assert table.means(c).tolist() == want_means
+        assert table.medians(c).tolist() == want_meds
+    assert [c.key() for c in table.cases()] == [("a", 1), ("b", 2)]
+    # index rebuilds when summaries grow
+    table.summaries.append(EpochSummary(
+        case=cases[0], epoch=4, mean=99.0, median=98.0, n_kept=1, n_raw=1))
+    assert table.means(cases[0])[-1] == 99.0
+    # unknown case -> empty
+    assert table.means(TestCase("zzz", 0)).size == 0
+
+
+def test_analyze_records_roundtrip_unchanged():
+    """analyze_records output is unaffected by the index (regression)."""
+    rng = np.random.default_rng(0)
+    from repro.core import MeasurementRecord
+    recs = [
+        MeasurementRecord(case=TestCase("op", 64), epoch=e,
+                          times=rng.normal(10.0, 1.0, 50))
+        for e in range(5)
+    ]
+    table = analyze_records(recs)
+    assert table.means(TestCase("op", 64)).size == 5
+    assert np.all(table.medians(TestCase("op", 64)) > 5)

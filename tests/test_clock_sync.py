@@ -91,17 +91,19 @@ def test_probe_matches_ground_truth():
 
 
 def test_hca2_hierarchical_intercepts_worse_than_hca():
-    """§4.4/Fig. 9: hierarchically merged intercepts accumulate error."""
+    """§4.4/Fig. 9: hierarchically merged intercepts accumulate error along
+    the tree. The effect is read *directly after* synchronization — a few
+    seconds later the slope-error drift (common to both variants) dominates
+    and the intercept signal drowns in it."""
     errs = {}
     for name in ["hca", "hca2"]:
         accs = []
-        for seed in range(3):
+        for seed in range(5):
             net = SimNet(16, seed=100 + seed)
             res = make_sync(name, n_fitpts=200, n_exchanges=40).synchronize(net)
-            net.sleep_all(5.0)
             accs.append(np.abs(true_offsets(net, res))[1:].max())
         errs[name] = np.median(accs)
-    assert errs["hca2"] >= errs["hca"] * 0.8  # hca2 not better (usually worse)
+    assert errs["hca2"] >= errs["hca"]
 
 
 def test_netgauge_error_grows_with_rounds():

@@ -106,6 +106,7 @@ _SUBPROC_SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow  # ~8 min: spawns a fresh 8-device child interpreter
 def test_multi_device_lowering_subprocess():
     """8-device mesh lowering succeeds end-to-end (train step, smoke config,
     real sharding rules) — run in a subprocess so this process keeps its

@@ -1,11 +1,13 @@
 """Pallas kernel validation: shape/dtype sweeps vs. the pure-jnp oracles
-(interpret mode on CPU) + hypothesis property tests."""
+(interpret mode on CPU) + hypothesis property tests (skipped when the
+optional ``hypothesis`` dependency is absent)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
 from repro.kernels.flash_attention.ref import flash_attention_ref
