@@ -15,6 +15,11 @@ Options:
                   only when one epoch outweighs pool startup)
   --json PATH     also write machine-readable results: per-bench wall-clock
                   seconds + rows, for recording the perf trajectory in CI
+  --store PATH    persist campaign results to an append-only JSONL
+                  ResultStore (re-running against the same store resumes:
+                  already-measured cells are loaded, not re-measured)
+  --compare A B   compare two stores' campaigns per test case (Wilcoxon on
+                  per-epoch medians, Fig. 28 style) and exit
 """
 
 from __future__ import annotations
@@ -23,6 +28,39 @@ import argparse
 import json
 import sys
 import time
+
+
+def _compare_stores(ap, path_a: str, path_b: str) -> None:
+    """Per-case Wilcoxon comparison (Fig. 28 style) of two stores' last
+    campaigns; warns when the campaigns' factor fingerprints differ in more
+    than the store identity (§5.9's comparability rule)."""
+    import os
+
+    from repro.campaign import ResultStore
+    from repro.core import compare_tables, format_comparison
+
+    for p in (path_a, path_b):
+        if not os.path.exists(p):
+            ap.error(f"--compare: store not found: {p}")
+    store_a, store_b = ResultStore(path_a), ResultStore(path_b)
+    fps_a, fps_b = store_a.fingerprints(), store_b.fingerprints()
+    if not fps_a or not fps_b:
+        ap.error("--compare: a store holds no campaigns")
+    for path, fps in ((path_a, fps_a), (path_b, fps_b)):
+        if len(fps) > 1:
+            print(f"# note: {path} holds {len(fps)} campaigns; comparing "
+                  f"the last one ({fps[-1]})", file=sys.stderr)
+    fa, fb = store_a.factors(), store_b.factors()
+    diffs = sorted(k for k in fa if k != "host" and fa.get(k) != fb.get(k))
+    if diffs:
+        print(f"# note: factor sets differ in {diffs} — treat these as the "
+              "factors under test", file=sys.stderr)
+    rows = compare_tables(store_a, store_b)
+    if not rows:
+        print("# no common test cases between the two stores", file=sys.stderr)
+        return
+    print(format_comparison(rows, name_a=os.path.basename(path_a),
+                            name_b=os.path.basename(path_b)))
 
 
 def main() -> None:
@@ -38,9 +76,18 @@ def main() -> None:
                     help="process-pool size for campaign launch epochs")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write per-bench wall-clock + rows as JSON")
+    ap.add_argument("--store", default=None, metavar="PATH",
+                    help="persist campaign results to a JSONL ResultStore")
+    ap.add_argument("--compare", nargs=2, default=None,
+                    metavar=("STOREA", "STOREB"),
+                    help="print the Wilcoxon comparison of two stores and exit")
     args = ap.parse_args()
     if args.seed < 0:
         ap.error("--seed must be >= 0 (it offsets non-negative RNG seeds)")
+
+    if args.compare:
+        _compare_stores(ap, *args.compare)
+        return
 
     from benchmarks import suite
     from benchmarks.suite import ALL_BENCHES
@@ -61,6 +108,7 @@ def main() -> None:
     suite.SEED_OFFSET = args.seed
     if args.workers is not None:
         suite.N_WORKERS = max(1, args.workers)
+    suite.STORE_PATH = args.store
 
     report = {"seed_offset": args.seed, "workers": suite.N_WORKERS,
               "benches": []}

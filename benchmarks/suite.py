@@ -14,16 +14,19 @@ Module knobs, set by ``benchmarks.run`` flags:
   * ``SEED_OFFSET`` (``--seed``): added to every simulator seed so the
     whole suite can be re-rolled under a different RNG universe;
   * ``N_WORKERS`` (``--workers``): campaign launch epochs fan out over a
-    process pool (results are bit-identical to the serial run).
+    process pool (results are bit-identical to the serial run);
+  * ``STORE_PATH`` (``--store``): persist every campaign cell to an
+    append-only JSONL :class:`~repro.campaign.ResultStore` (resumable).
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+import warnings
 
 import numpy as np
 
+from repro.campaign import Campaign, CampaignSpec, ResultStore, SimBackend
 from repro.core import (
     ClockParams,
     ExperimentDesign,
@@ -54,6 +57,7 @@ SEED_OFFSET = 0    # set by benchmarks.run --seed
 # epoch is ~10 ms, far below process-pool startup cost; epoch parallelism
 # pays off for heavyweight epochs (large p, real jit-compiled epochs).
 N_WORKERS = 1
+STORE_PATH = None  # set by benchmarks.run --store
 
 
 def _seed(s):
@@ -64,50 +68,31 @@ def _kw(name):
     return SYNC_KW if name in ("jk", "hca", "hca2") else {}
 
 
-@dataclass
-class _SimEpochFactory:
-    """Fresh simulated launch epoch: new cluster + clock sync + op model.
-
-    A module-level class (not a closure) so campaign epochs can be shipped
-    to pool workers by :func:`repro.core.design.run_design`.
-    """
-
-    p: int
-    seed0: int
-    op: str = "allreduce"
-    op_kw: dict = field(default_factory=dict)
-    sync_name: str = "hca"
-    sync_kw: dict = field(default_factory=lambda: dict(SYNC_KW))
-
-    def __call__(self, epoch):
-        net = SimNet(self.p, seed=self.seed0 + 1000 * epoch)
-        sync = make_sync(self.sync_name, **self.sync_kw).synchronize(net)
-        return (net, sync, make_op(self.op, **self.op_kw))
-
-
-@dataclass
-class _WindowedMeasure:
-    """Window-synchronized measurement of one case (picklable)."""
-
-    win_size: float = 400e-6
-
-    def __call__(self, ctx, case, nrep):
-        net, sync, op = ctx
-        wr = run_windowed(net, sync, op, case.msize, nrep,
-                          win_size=self.win_size)
-        return wr.valid_times if wr.valid_times.size else wr.times
-
-
 def _campaign(seed0, n=10, nrep=60, msizes=(256, 4096), op_kw=None, p=8):
+    """The paper method against the simulator, via the campaign subsystem.
+
+    :class:`~repro.campaign.SimBackend` is a picklable dataclass, so the
+    ``N_WORKERS`` epoch fan-out still works. With ``--store`` the campaign
+    additionally persists every cell to the JSONL store (and *resumes* —
+    re-running the suite against the same store re-measures nothing).
+    """
+    backend = SimBackend(p=p, seed0=seed0, op_kw=op_kw or {})
     cases = [TestCase("allreduce", m) for m in msizes]
-    records = run_design(
-        ExperimentDesign(n, nrep, seed=seed0),
-        _SimEpochFactory(p=p, seed0=seed0, op_kw=op_kw or {}),
-        _WindowedMeasure(),
-        cases,
-        n_workers=N_WORKERS,
-    )
+    design = ExperimentDesign(n, nrep, seed=seed0)
+    if STORE_PATH:
+        if N_WORKERS > 1 and not _campaign.warned_serial:
+            _campaign.warned_serial = True
+            warnings.warn("--store runs campaigns through the (serial) "
+                          "Campaign orchestrator; --workers is ignored",
+                          RuntimeWarning, stacklevel=2)
+        res = Campaign(CampaignSpec(cases, design, name=f"suite-{seed0}"),
+                       backend, ResultStore(STORE_PATH)).run()
+        return res.table
+    records = run_design(design, backend, cases=cases, n_workers=N_WORKERS)
     return analyze_records(records)
+
+
+_campaign.warned_serial = False
 
 
 # --------------------------------------------------------------------- T1

@@ -1,63 +1,46 @@
 """Fair comparison of two REAL implementations, the paper's way (§6).
 
-Question: is the q-chunked reference attention faster than the dense
-reference attention on this host, for a gemma2-style block at seq 1024?
-Answer it properly: n launch epochs (fresh jit caches) x nrep fenced
-timings, Tukey filtering, Wilcoxon on per-epoch medians, significance
-stars — not a single-number eyeball.
+Question: is the Pallas flash-attention kernel faster than its jnp
+reference on this host at seq 128/256? Answer it properly: the *same*
+campaign spec runs against two :class:`~repro.campaign.KernelBackend`
+configurations (``impl="pallas"`` vs ``impl="ref"``), with launch epochs =
+fresh jit caches, adaptive nrep, Tukey filtering, and Wilcoxon on
+per-epoch medians — not a single-number eyeball.
+
+Off-TPU the Pallas kernel runs in interpret mode, so "ref faster" is the
+expected verdict there; on a TPU the same script answers the real
+question.
 
     PYTHONPATH=src python examples/compare_impls.py
 """
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.campaign import Campaign, CampaignSpec, KernelBackend
+from repro.core import (ExperimentDesign, TestCase, compare_tables,
+                        format_comparison)
 
-from repro.core import (ExperimentDesign, TestCase, analyze_records,
-                        compare_tables, format_comparison, run_design)
-from repro.core.runtime_meter import MeterConfig, make_jax_measure
-from repro.models.attention import _attention_dense, attention_reference
-
-B, S, H, HKV, D = 2, 1024, 8, 2, 64
-
-
-def make_inputs():
-    rng = np.random.default_rng(0)
-    q = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
-    k = jnp.asarray(rng.normal(0, 1, (B, S, HKV, D)), jnp.float32)
-    v = jnp.asarray(rng.normal(0, 1, (B, S, HKV, D)), jnp.float32)
-    return q, k, v
-
-
-def campaign(fn, name):
-    q, k, v = make_inputs()
-
-    def build(epoch):
-        f = jax.jit(fn)
-
-        def call():
-            return f(q, k, v)
-
-        return {name: call}
-
-    epoch_factory, measure = make_jax_measure(build, MeterConfig(warmup=2))
-    recs = run_design(ExperimentDesign(n_launch_epochs=5, nrep=20, seed=7),
-                      epoch_factory, measure, [TestCase(name, S)])
-    return analyze_records(recs)
+SEQS = (128, 256)
 
 
 def main():
-    dense = campaign(
-        lambda q, k, v: _attention_dense(q, k, v, causal=True, window=None,
-                                         logit_cap=0.0, q_offset=0,
-                                         kv_len=None), "attn")
-    chunked = campaign(lambda q, k, v: attention_reference(q, k, v), "attn")
-    rows = compare_tables(chunked, dense)
-    print(format_comparison(rows, "chunked", "dense"))
+    spec = CampaignSpec(
+        cases=[TestCase("flash_attention", s) for s in SEQS],
+        design=ExperimentDesign(n_launch_epochs=5, nrep_min=5, nrep_max=30,
+                                rel_ci_target=0.05, seed=7),
+        name="flash-attn-vs-ref",
+    )
+    shape = dict(batch=2, heads=4, kv_heads=2, head_dim=64)
+    pallas = Campaign(spec, KernelBackend(impl="pallas", **shape)).run()
+    ref = Campaign(spec, KernelBackend(impl="ref", **shape)).run()
+
+    rows = compare_tables(pallas.table, ref.table)
+    print(format_comparison(rows, "pallas", "ref"))
     for r in rows:
-        print(f"\nverdict @ seq {S}: chunked is "
-              f"{'faster' if r.verdict == 'A<B' else 'slower' if r.verdict == 'A>B' else 'indistinguishable from'}"
-              f" dense (p_less={r.p_a_less:.2e}, p_greater={r.p_a_greater:.2e})")
+        verdict = ("faster than" if r.verdict == "A<B" else
+                   "slower than" if r.verdict == "A>B" else
+                   "indistinguishable from")
+        print(f"verdict @ seq {r.case.msize}: pallas kernel is {verdict} "
+              f"the jnp reference (p_less={r.p_a_less:.2e}, "
+              f"p_greater={r.p_a_greater:.2e})")
 
 
 if __name__ == "__main__":

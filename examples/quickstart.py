@@ -2,17 +2,22 @@
 
 Synchronize a (simulated) 16-host cluster with HCA, measure a collective
 under window-based sync vs. a skewed library barrier, then compare two
-"MPI libraries" the statistically sound way (Wilcoxon on per-epoch medians).
+"MPI libraries" the statistically sound way — as two *campaigns* on the
+pluggable measurement-backend API, with adaptive nrep and a persistent
+result store.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import os
+import tempfile
+
 import numpy as np
 
+from repro.campaign import Campaign, CampaignSpec, ResultStore, SimBackend
 from repro.core import (
-    ExperimentDesign, SimNet, TestCase, analyze_records, compare_tables,
-    format_comparison, make_op, make_sync, run_barrier_timed, run_design,
-    run_windowed, true_offsets,
+    ExperimentDesign, SimNet, TestCase, compare_tables, format_comparison,
+    make_op, make_sync, run_barrier_timed, run_windowed, true_offsets,
 )
 
 # --- 1. drift-corrected clock synchronization (HCA, §4.4) -----------------
@@ -34,23 +39,29 @@ print(f"windowed global time : {wr.valid_times.mean()*1e6:8.2f}us "
 print(f"barrier local-max    : {br.times_local.mean()*1e6:8.2f}us "
       f"(includes ~40us library barrier skew!)")
 
-# --- 3. statistically sound comparison (§6) --------------------------------
-def campaign(op_kw, seed0):
-    def epoch(e):
-        n = SimNet(8, seed=seed0 + 997 * e)
-        s = make_sync("hca", n_fitpts=200, n_exchanges=40).synchronize(n)
-        return (n, s, make_op("allreduce", **op_kw))
+# --- 3. statistically sound comparison, the campaign way (§6) --------------
+# One spec; two backends modeling two "MPI libraries". Adaptive nrep: each
+# case keeps sampling until its mean is known to ~3%, capped at 200 reps.
+spec = CampaignSpec(
+    cases=[TestCase("allreduce", m) for m in (256, 4096)],
+    design=ExperimentDesign(n_launch_epochs=10, nrep_min=30, nrep_max=200,
+                            rel_ci_target=0.03, seed=42),
+    name="quickstart",
+)
+lib_a = SimBackend(p=8, seed0=100, op_kw=dict(gamma=2e-6))
+lib_b = SimBackend(p=8, seed0=900, op_kw=dict(gamma=2e-6, alpha=3.8e-6))
 
-    def measure(ctx, case, nrep):
-        n, s, o = ctx
-        return run_windowed(n, s, o, case.msize, nrep, 400e-6).valid_times
+with tempfile.TemporaryDirectory() as td:
+    store_a = ResultStore(os.path.join(td, "libA.jsonl"))
+    store_b = ResultStore(os.path.join(td, "libB.jsonl"))
+    res_a = Campaign(spec, lib_a, store_a).run()
+    res_b = Campaign(spec, lib_b, store_b).run()
+    used = [r.meta["nrep_used"] for r in res_a.records]
+    print(f"\nadaptive nrep: {min(used)}..{max(used)} reps/case "
+          f"(cap 200); store holds {len(store_a.records())} cells "
+          f"under fingerprint {res_a.fingerprint}")
 
-    recs = run_design(ExperimentDesign(n_launch_epochs=10, nrep=60, seed=seed0),
-                      epoch, measure, [TestCase("allreduce", m)
-                                       for m in (256, 4096)])
-    return analyze_records(recs)
-
-lib_a = campaign(dict(gamma=2e-6), 100)                 # library A
-lib_b = campaign(dict(gamma=2e-6, alpha=3.8e-6), 900)   # library B (slower)
-print("\nWilcoxon comparison over 10 launch epochs each:")
-print(format_comparison(compare_tables(lib_a, lib_b), "libA", "libB"))
+    # a second run against the same store would resume, not re-measure;
+    # compare_tables reads the persisted campaigns directly.
+    print("\nWilcoxon comparison over 10 launch epochs each:")
+    print(format_comparison(compare_tables(store_a, store_b), "libA", "libB"))

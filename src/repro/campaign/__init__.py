@@ -1,0 +1,35 @@
+"""repro.campaign — pluggable measurement backends, persistent result
+stores, and a resumable end-to-end orchestrator for the paper's method.
+
+The architectural spine of "one system, many scenarios": a
+:class:`MeasurementBackend` abstracts *what is being measured* (simulated
+collectives, real jitted JAX collectives, Pallas kernels) away from *how
+the experiment is designed* (:mod:`repro.core.design`) and *where results
+live* (:class:`ResultStore`). ::
+
+    from repro.campaign import Campaign, CampaignSpec, SimBackend, ResultStore
+    from repro.core import ExperimentDesign, TestCase, compare_tables
+
+    spec = CampaignSpec([TestCase("allreduce", 4096)],
+                        ExperimentDesign(n_launch_epochs=10,
+                                         nrep_min=20, nrep_max=200))
+    res = Campaign(spec, SimBackend(p=16), ResultStore("a.jsonl")).run()
+    rows = compare_tables(ResultStore("a.jsonl"), ResultStore("b.jsonl"))
+"""
+
+from .backends import (JaxBackend, KernelBackend, MeasurementBackend,
+                       SimBackend, ensure_host_devices)
+from .core import Campaign, CampaignResult, CampaignSpec
+from .store import ResultStore
+
+__all__ = [
+    "MeasurementBackend",
+    "SimBackend",
+    "JaxBackend",
+    "KernelBackend",
+    "ensure_host_devices",
+    "Campaign",
+    "CampaignResult",
+    "CampaignSpec",
+    "ResultStore",
+]

@@ -1,0 +1,340 @@
+"""Pluggable measurement backends for the paper's method.
+
+The experimental design (Alg. 5/6) is engine-agnostic: it needs a fresh
+context per *launch epoch*, a way to *measure* one test case, and the
+:class:`~repro.core.factors.FactorSet` describing everything else that was
+held fixed. A :class:`MeasurementBackend` packages exactly those three
+capabilities, so the same :class:`~repro.campaign.Campaign` spec runs
+against
+
+  * :class:`SimBackend`    — the calibrated cluster simulator
+    (:class:`~repro.core.simnet.SimNet` + window-based sync, §3.3/§4),
+  * :class:`JaxBackend`    — real jitted JAX collectives (``psum`` /
+    ``all_gather`` / ``all_to_all``) over a host-device mesh
+    (``--xla_force_host_platform_device_count`` off-TPU),
+  * :class:`KernelBackend` — Pallas kernels vs. their jnp references as
+    the operations under test (interpret mode off-TPU).
+
+Backends are plain picklable dataclasses so
+:func:`~repro.core.design.run_design` can fan their launch epochs over a
+process pool, and deterministic per ``(seed0, epoch)`` so a resumed
+campaign reproduces the original records bit-for-bit.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.design import ExperimentDesign, TestCase
+from repro.core.factors import FactorSet, capture_factors
+from repro.core.mpi_ops import make_op
+from repro.core.runtime_meter import JaxEpochContext, MeterConfig
+from repro.core.simnet import SimNet
+from repro.core.sync import make_sync
+from repro.core.window import WindowRun, run_windowed
+
+__all__ = [
+    "MeasurementBackend",
+    "SimBackend",
+    "JaxBackend",
+    "KernelBackend",
+    "ensure_host_devices",
+]
+
+_SYNC_KW = dict(n_fitpts=200, n_exchanges=40)
+
+
+@runtime_checkable
+class MeasurementBackend(Protocol):
+    """What a measurement engine must provide to run the paper's method."""
+
+    name: str
+
+    def make_epoch(self, epoch: int) -> Any:
+        """Fresh launch-epoch context (the §5.2 blocking factor)."""
+        ...
+
+    def measure(self, ctx: Any, case: TestCase, nrep: int) -> np.ndarray:
+        """``nrep`` run-times [s] of ``case`` inside an epoch context."""
+        ...
+
+    def factors(self, design: ExperimentDesign) -> FactorSet:
+        """The Table-4 factor set a campaign on this backend must carry."""
+        ...
+
+    def default_cases(self) -> list[TestCase]:
+        """Cases to run when the campaign spec does not name any."""
+        ...
+
+
+def _design_factor_kw(design: ExperimentDesign) -> dict:
+    return dict(
+        n_launch_epochs=design.n_launch_epochs,
+        nrep=0 if design.adaptive else design.nrep,
+        nrep_min=design.nrep_min if design.adaptive else 0,
+        nrep_max=(design.nrep_max or 0) if design.adaptive else 0,
+        rel_ci_target=design.rel_ci_target if design.adaptive else 0.0,
+        design_seed=design.seed,
+        shuffle=design.shuffle,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Simulator backend
+# ---------------------------------------------------------------------------
+
+class _SimEpoch:
+    """One simulated launch epoch: a fresh cluster, synchronized clocks,
+    and a lazily-built cost model per op name."""
+
+    def __init__(self, backend: "SimBackend", epoch: int):
+        self.backend = backend
+        self.net = SimNet(backend.p, seed=backend.seed0 + 1000 * epoch)
+        self.sync = make_sync(backend.sync_name,
+                              **backend.sync_kw).synchronize(self.net)
+        self._ops: dict[str, Any] = {}
+
+    def op(self, name: str):
+        if name not in self._ops:
+            self._ops[name] = make_op(name, **self.backend.op_kw)
+        return self._ops[name]
+
+
+@dataclass
+class SimBackend:
+    """Simulated cluster measured through window-based synchronization.
+
+    ``case.op`` selects the collective's cost-model preset (unknown names
+    get the generic model), ``case.msize`` the message size; ``op_kw``
+    overrides apply to every case, which is how two "MPI libraries" with
+    different latency terms are modeled. Window discards (START_LATE /
+    TOOK_TOO_LONG) are topped up so the returned sample has ~``nrep``
+    valid observations.
+    """
+
+    p: int = 8
+    seed0: int = 0
+    op_kw: dict = field(default_factory=dict)
+    sync_name: str = "hca"
+    sync_kw: dict = field(default_factory=lambda: dict(_SYNC_KW))
+    win_size: float = 400e-6
+    engine: str = "auto"
+    name: str = "sim"
+
+    def make_epoch(self, epoch: int) -> _SimEpoch:
+        return _SimEpoch(self, epoch)
+
+    def measure(self, ctx: _SimEpoch, case: TestCase, nrep: int) -> np.ndarray:
+        op = ctx.op(case.op)
+        runs = [run_windowed(ctx.net, ctx.sync, op, case.msize, nrep,
+                             win_size=self.win_size, engine=self.engine)]
+        # top up the window discards (bounded: at most 2 extra chunks)
+        for _ in range(2):
+            missing = nrep - sum(r.valid_times.size for r in runs)
+            if missing <= 0:
+                break
+            runs.append(run_windowed(ctx.net, ctx.sync, op, case.msize,
+                                     missing, win_size=self.win_size,
+                                     engine=self.engine))
+        wr = WindowRun.concat(runs)
+        # Degenerate case (window far too small): nothing valid anywhere.
+        # Return at most nrep raw observations rather than every top-up
+        # draw, so adaptive stopping's sample-size accounting stays honest.
+        return wr.valid_times if wr.valid_times.size else wr.times[:nrep]
+
+    def factors(self, design: ExperimentDesign) -> FactorSet:
+        return capture_factors(
+            backend="sim",
+            device_kind="simnet",
+            measurement_backend=self.name,
+            sync_method=self.sync_name,
+            window_size_us=self.win_size * 1e6,
+            epoch_isolation="process",
+            extra=(("p", self.p), ("seed0", self.seed0),
+                   ("op_kw", tuple(sorted(self.op_kw.items()))),
+                   ("sync_kw", tuple(sorted(self.sync_kw.items()))),
+                   ("engine", self.engine)),
+            **_design_factor_kw(design),
+        )
+
+    def default_cases(self) -> list[TestCase]:
+        return [TestCase("allreduce", m) for m in (256, 4096)]
+
+
+# ---------------------------------------------------------------------------
+# Real-JAX collective backend
+# ---------------------------------------------------------------------------
+
+def ensure_host_devices(n: int) -> int:
+    """Request ``n`` host CPU devices via
+    ``--xla_force_host_platform_device_count`` and return the count JAX
+    actually provides. Only effective if called before JAX initializes its
+    backends; afterwards it just reports the live device count."""
+    import os
+
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = \
+            f"{flags} --xla_force_host_platform_device_count={n}".strip()
+    import jax
+
+    return jax.device_count()
+
+
+@dataclass
+class JaxBackend:
+    """Real jitted JAX collectives on a host-device mesh.
+
+    ``case.op`` is one of ``psum`` / ``all_gather`` / ``all_to_all`` —
+    lowered through ``jax.pmap`` over ``n_devices`` devices so the timed
+    executable contains a genuine cross-device collective even on a single
+    host (``--xla_force_host_platform_device_count``). ``case.msize`` is
+    the per-device payload in bytes. A launch epoch re-jits the collective
+    (``epoch_isolation="clear_caches"``), the in-process analogue of a
+    fresh mpirun.
+    """
+
+    ops: tuple = ("psum", "all_gather", "all_to_all")
+    n_devices: int | None = None      # None = all available
+    meter: MeterConfig = field(
+        default_factory=lambda: MeterConfig(epoch_isolation="clear_caches"))
+    dtype: str = "float32"
+    name: str = "jax"
+
+    def _ndev(self) -> int:
+        import jax
+
+        n = self.n_devices or jax.device_count()
+        if n > jax.device_count():
+            raise ValueError(
+                f"JaxBackend: {n} devices requested, {jax.device_count()} "
+                "available — set --xla_force_host_platform_device_count")
+        return n
+
+    def _build_collective(self, op: str, msize: int):
+        import jax
+        import jax.numpy as jnp
+        from jax import lax
+
+        n = self._ndev()
+        itemsize = jnp.dtype(self.dtype).itemsize
+        # per-device payload, padded so all_to_all's split axis divides
+        count = max(n, int(np.ceil(msize / itemsize)))
+        count = int(np.ceil(count / n)) * n
+        devices = jax.devices()[:n]
+        shape = (n, count)
+        if op == "psum":
+            f = jax.pmap(lambda x: lax.psum(x, "i"), axis_name="i",
+                         devices=devices)
+        elif op == "all_gather":
+            f = jax.pmap(lambda x: lax.all_gather(x, "i"), axis_name="i",
+                         devices=devices)
+        elif op == "all_to_all":
+            # split axis must equal the mesh size: (n, count//n) per device
+            shape = (n, n, count // n)
+            f = jax.pmap(lambda x: lax.all_to_all(x, "i", 0, 0),
+                         axis_name="i", devices=devices)
+        else:
+            raise ValueError(f"JaxBackend: unknown collective {op!r}; "
+                             f"one of {self.ops}")
+        x = jnp.zeros(shape, self.dtype) + jnp.arange(n).reshape(
+            (n,) + (1,) * (len(shape) - 1))
+        return lambda: f(x)
+
+    def make_epoch(self, epoch: int) -> JaxEpochContext:
+        def build(_epoch: int) -> dict:
+            return {}  # callables are built lazily, one per case
+
+        ctx = JaxEpochContext(build, epoch, self.meter)
+        return ctx
+
+    def measure(self, ctx: JaxEpochContext, case: TestCase,
+                nrep: int) -> np.ndarray:
+        key = f"{case.op}@{case.msize}"
+        if key not in ctx.callables:
+            ctx.callables[key] = self._build_collective(case.op, case.msize)
+        return ctx.measure(key, nrep)
+
+    def factors(self, design: ExperimentDesign) -> FactorSet:
+        return capture_factors(
+            measurement_backend=self.name,
+            sync_method="block_until_ready",
+            mesh_shape=(self._ndev(),),
+            mesh_axes=("i",),
+            epoch_isolation=self.meter.epoch_isolation,
+            buffer_policy="cold" if self.meter.cold_buffers else "warm",
+            dtype=self.dtype,
+            extra=(("ops", tuple(self.ops)), ("warmup", self.meter.warmup)),
+            **_design_factor_kw(design),
+        )
+
+    def default_cases(self) -> list[TestCase]:
+        return [TestCase(op, m) for op in self.ops for m in (1 << 10, 1 << 16)]
+
+
+# ---------------------------------------------------------------------------
+# Pallas-kernel backend
+# ---------------------------------------------------------------------------
+
+@dataclass
+class KernelBackend:
+    """Pallas kernels vs. their jnp references as operations under test.
+
+    ``case.op`` names the kernel (``flash_attention`` / ``ssd_scan``),
+    ``case.msize`` is the sequence length. ``impl`` selects which side of
+    the A/B comparison this backend measures — run one campaign with
+    ``impl="pallas"`` and one with ``impl="ref"``, then
+    :func:`~repro.core.compare.compare_tables` answers "is the kernel
+    faster?" the statistically sound way.
+    """
+
+    impl: str = "pallas"              # pallas | ref
+    batch: int = 1
+    heads: int = 4
+    kv_heads: int | None = None
+    head_dim: int = 32
+    state_dim: int = 16
+    interpret: bool | None = None     # None = auto (interpret off-TPU)
+    seed0: int = 0
+    meter: MeterConfig = field(
+        default_factory=lambda: MeterConfig(epoch_isolation="clear_caches",
+                                            warmup=1))
+    name: str = "kernel"
+
+    def make_epoch(self, epoch: int) -> JaxEpochContext:
+        def build(_epoch: int) -> dict:
+            return {}
+
+        return JaxEpochContext(build, epoch, self.meter)
+
+    def measure(self, ctx: JaxEpochContext, case: TestCase,
+                nrep: int) -> np.ndarray:
+        from repro.kernels.ops import make_benchmark_op
+
+        key = f"{case.op}@{case.msize}"
+        if key not in ctx.callables:
+            ctx.callables[key] = make_benchmark_op(
+                case.op, self.impl, seq=case.msize, batch=self.batch,
+                heads=self.heads, kv_heads=self.kv_heads,
+                head_dim=self.head_dim, state_dim=self.state_dim,
+                seed=self.seed0 + ctx.epoch, interpret=self.interpret)
+        return ctx.measure(key, nrep)
+
+    def factors(self, design: ExperimentDesign) -> FactorSet:
+        return capture_factors(
+            measurement_backend=self.name,
+            sync_method="block_until_ready",
+            epoch_isolation=self.meter.epoch_isolation,
+            extra=(("impl", self.impl), ("batch", self.batch),
+                   ("heads", self.heads), ("kv_heads", self.kv_heads),
+                   ("head_dim", self.head_dim),
+                   ("state_dim", self.state_dim), ("seed0", self.seed0),
+                   ("interpret", self.interpret)),
+            **_design_factor_kw(design),
+        )
+
+    def default_cases(self) -> list[TestCase]:
+        return [TestCase("flash_attention", s) for s in (64, 128)]

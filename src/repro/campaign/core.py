@@ -1,0 +1,116 @@
+"""The Campaign orchestrator: the paper's method end-to-end, resumable.
+
+A :class:`CampaignSpec` (cases + :class:`~repro.core.design.ExperimentDesign`)
+run by :class:`Campaign` against any
+:class:`~repro.campaign.backends.MeasurementBackend` executes the full
+pipeline —
+
+  factor capture → launch-epoch replication → randomized case order →
+  (adaptive-nrep) measurement → persistent store → Tukey + per-epoch
+  averages (Alg. 6)
+
+— and returns a :class:`CampaignResult`. With a
+:class:`~repro.campaign.store.ResultStore` attached, every measured cell is
+appended the moment it exists, and re-running the identical spec *resumes*:
+cells already in the store are loaded instead of re-measured (the epoch
+context is not even built unless a cell in that epoch is missing). Case
+orders are drawn up front from the design seed exactly as
+:func:`~repro.core.design.run_design` draws them, so a campaign resumed at
+an epoch boundary yields records identical to an uninterrupted one. Inside
+a partially measured epoch, the missing cells are measured fresh against a
+rebuilt epoch context — valid observations of the same cell, but not
+bit-identical to what the uninterrupted run would have drawn when the
+backend's RNG state advances per measurement (the simulator's does).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.design import (ExperimentDesign, MeasurementRecord,
+                               ResultTable, TestCase, analyze_records,
+                               case_orders, measure_case)
+from repro.core.factors import FactorSet
+
+from .backends import MeasurementBackend
+from .store import ResultStore
+
+__all__ = ["CampaignSpec", "CampaignResult", "Campaign"]
+
+
+@dataclass
+class CampaignSpec:
+    """What to measure, independent of how: the backend supplies the how."""
+
+    cases: list[TestCase]
+    design: ExperimentDesign
+    name: str = "campaign"
+
+    def meta(self) -> dict:
+        d = self.design
+        return dict(
+            name=self.name,
+            cases=[[c.op, int(c.msize)] for c in self.cases],
+            n_launch_epochs=d.n_launch_epochs,
+            nrep=d.nrep, nrep_min=d.nrep_min, nrep_max=d.nrep_max,
+            rel_ci_target=d.rel_ci_target, shuffle=d.shuffle, seed=d.seed,
+        )
+
+
+@dataclass
+class CampaignResult:
+    records: list[MeasurementRecord]
+    table: ResultTable
+    factors: FactorSet
+    fingerprint: str | None = None
+    n_measured: int = 0               # cells executed this run
+    n_resumed: int = 0                # cells loaded from the store
+    meta: dict = field(default_factory=dict)
+
+
+class Campaign:
+    """Run a :class:`CampaignSpec` on a backend, optionally through a store."""
+
+    def __init__(self, spec: CampaignSpec, backend: MeasurementBackend,
+                 store: ResultStore | None = None):
+        self.spec = spec
+        self.backend = backend
+        self.store = store
+
+    def run(self) -> CampaignResult:
+        spec, backend, store = self.spec, self.backend, self.store
+        design = spec.design
+        cases = list(spec.cases) or backend.default_cases()
+        factors = backend.factors(design)
+
+        fingerprint = None
+        done: dict[tuple[str, int, int], MeasurementRecord] = {}
+        if store is not None:
+            fingerprint = store.append_campaign(factors, spec.meta())
+            done = {(r.case.op, r.case.msize, r.epoch): r
+                    for r in store.records(fingerprint)}
+
+        records: list[MeasurementRecord] = []
+        n_measured = n_resumed = 0
+        for epoch, order in enumerate(case_orders(design, cases)):
+            missing = [c for c in order
+                       if (c.op, c.msize, epoch) not in done]
+            ctx = backend.make_epoch(epoch) if missing else None
+            for case in order:
+                key = (case.op, case.msize, epoch)
+                if key in done:
+                    records.append(done[key])
+                    n_resumed += 1
+                    continue
+                times, meta = measure_case(backend.measure, ctx, case, design)
+                rec = MeasurementRecord(case=case, epoch=epoch, times=times,
+                                        meta=meta)
+                if store is not None:
+                    store.append_record(fingerprint, rec)
+                records.append(rec)
+                n_measured += 1
+
+        table = analyze_records(records, design.outlier_filter)
+        return CampaignResult(records=records, table=table, factors=factors,
+                              fingerprint=fingerprint, n_measured=n_measured,
+                              n_resumed=n_resumed, meta=spec.meta())

@@ -1,0 +1,170 @@
+"""Append-only persistent result store (JSONL), keyed by factor fingerprint.
+
+PGMPI-style self-consistency checking (Hunold et al.) needs durable,
+factor-annotated results that survive the process and can be compared
+across runs, machines and backends. The store is a single append-only
+JSONL file holding two kinds of lines:
+
+  ``{"kind": "campaign", "fingerprint": ..., "factors": {...}, "spec": ...}``
+      declares a campaign: the full :class:`~repro.core.factors.FactorSet`
+      and the spec metadata, written once per fingerprint;
+
+  ``{"kind": "record", "fingerprint": ..., "op": ..., "msize": ...,
+     "epoch": ..., "times": [...], "meta": {...}}``
+      one measured cell (case x launch epoch), appended the moment it is
+      measured — so a killed campaign loses at most one cell.
+
+Appending is atomic at line granularity, times round-trip exactly
+(``json`` emits shortest-repr doubles), and a truncated final line (crash
+mid-write) is skipped on load. The fingerprint key means one file can hold
+many campaigns; :meth:`ResultStore.to_table` makes a store directly
+consumable by :func:`~repro.core.compare.compare_tables`.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Iterable
+
+import numpy as np
+
+from repro.core.design import (MeasurementRecord, ResultTable, TestCase,
+                               analyze_records)
+from repro.core.factors import FactorSet
+
+__all__ = ["ResultStore"]
+
+
+class ResultStore:
+    """Append-only JSONL store of campaign measurement records."""
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = Path(path)
+
+    # -- writing ----------------------------------------------------------
+
+    def _append(self, obj: dict) -> None:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        with open(self.path, "a") as f:
+            f.write(json.dumps(obj, sort_keys=True) + "\n")
+            f.flush()
+
+    def append_campaign(self, factors: FactorSet, spec: dict | None = None) -> str:
+        """Declare a campaign; returns its fingerprint.
+
+        Campaign identity is the *factor* fingerprint, deliberately not the
+        spec's case list: growing a campaign with new cases or message
+        sizes under unchanged experimental conditions is a resume of the
+        same experiment, not a new one (cells are keyed per case x epoch).
+        A fingerprint already declared with the same spec is not
+        re-declared — which is what makes re-running a *resume* — but a
+        changed spec appends a fresh declaration so the file's last
+        declaration always describes the data actually in it.
+        """
+        fp = factors.fingerprint()
+        spec = spec or {}
+        last_spec = None
+        for obj in self._lines():
+            if obj.get("kind") == "campaign" and obj["fingerprint"] == fp:
+                last_spec = obj.get("spec", {})
+        if last_spec != spec:
+            self._append(dict(kind="campaign", fingerprint=fp,
+                              factors=factors.to_dict(), spec=spec))
+        return fp
+
+    def append_record(self, fingerprint: str, rec: MeasurementRecord) -> None:
+        self._append(dict(
+            kind="record", fingerprint=fingerprint,
+            op=rec.case.op, msize=int(rec.case.msize), epoch=int(rec.epoch),
+            times=[float(t) for t in np.asarray(rec.times, np.float64)],
+            invalid_fraction=float(rec.invalid_fraction),
+            meta=_jsonable(rec.meta),
+        ))
+
+    # -- reading ----------------------------------------------------------
+
+    def _lines(self) -> Iterable[dict]:
+        if not self.path.exists():
+            return
+        with open(self.path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    yield json.loads(line)
+                except json.JSONDecodeError:
+                    continue  # truncated tail line from a crashed writer
+
+    def fingerprints(self) -> list[str]:
+        """Campaign fingerprints in file (declaration) order."""
+        seen: list[str] = []
+        for obj in self._lines():
+            if obj.get("kind") == "campaign" and obj["fingerprint"] not in seen:
+                seen.append(obj["fingerprint"])
+        return seen
+
+    def factors(self, fingerprint: str | None = None) -> dict:
+        """The declared factor dict of a campaign (default: the last one)."""
+        out: dict | None = None
+        for obj in self._lines():
+            if obj.get("kind") != "campaign":
+                continue
+            if fingerprint is None or obj["fingerprint"] == fingerprint:
+                out = obj["factors"]
+        if out is None:
+            raise KeyError(f"no campaign {fingerprint!r} in {self.path}")
+        return out
+
+    def completed(self, fingerprint: str) -> set[tuple[str, int, int]]:
+        """``(op, msize, epoch)`` keys of every cell already measured."""
+        return {(o["op"], int(o["msize"]), int(o["epoch"]))
+                for o in self._lines()
+                if o.get("kind") == "record"
+                and o["fingerprint"] == fingerprint}
+
+    def records(self, fingerprint: str | None = None) -> list[MeasurementRecord]:
+        """Measurement records of one campaign (default: the last declared
+        fingerprint), in append order."""
+        if fingerprint is None:
+            fps = self.fingerprints()
+            if not fps:
+                return []
+            fingerprint = fps[-1]
+        out: list[MeasurementRecord] = []
+        for o in self._lines():
+            if o.get("kind") != "record" or o["fingerprint"] != fingerprint:
+                continue
+            out.append(MeasurementRecord(
+                case=TestCase(o["op"], int(o["msize"])),
+                epoch=int(o["epoch"]),
+                times=np.asarray(o["times"], np.float64),
+                invalid_fraction=float(o.get("invalid_fraction", 0.0)),
+                meta=o.get("meta", {}),
+            ))
+        return out
+
+    def to_table(self, fingerprint: str | None = None,
+                 outlier_filter: bool = True) -> ResultTable:
+        """Algorithm-6 reduction of a stored campaign — the adapter that
+        lets ``compare_tables(store_a, store_b)`` work directly."""
+        return analyze_records(self.records(fingerprint), outlier_filter)
+
+
+def _jsonable(meta: dict) -> dict:
+    out = {}
+    for k, v in (meta or {}).items():
+        if isinstance(v, (np.integer,)):
+            v = int(v)
+        elif isinstance(v, (np.floating,)):
+            v = float(v)
+        elif isinstance(v, np.ndarray):
+            v = v.tolist()
+        try:
+            json.dumps(v)
+        except TypeError:
+            v = repr(v)
+        out[k] = v
+    return out

@@ -17,6 +17,9 @@ from .design import (
     ResultTable,
     TestCase,
     analyze_records,
+    case_orders,
+    measure_adaptive,
+    measure_case,
     run_design,
 )
 from .factors import FactorSet, assert_comparable, capture_factors
@@ -29,6 +32,7 @@ from .stats import (
     jarque_bera,
     mean_confidence_interval,
     normal_ppf,
+    relative_ci_width,
     significance_stars,
     t_ppf,
     tukey_filter,
@@ -65,10 +69,11 @@ __all__ = [
     "tukey_filter", "wilcoxon_rank_sum", "significance_stars",
     "mean_confidence_interval", "jarque_bera", "autocorrelation",
     "autocorr_significant_lags", "coefficient_of_variation", "normal_ppf",
-    "t_ppf",
+    "t_ppf", "relative_ci_width",
     # design & comparison
     "ExperimentDesign", "TestCase", "run_design", "analyze_records",
-    "ResultTable", "EpochSummary", "MeasurementRecord",
+    "ResultTable", "EpochSummary", "MeasurementRecord", "case_orders",
+    "measure_case", "measure_adaptive",
     "compare_tables", "ComparisonRow", "naive_comparison", "format_comparison",
     # factors
     "FactorSet", "capture_factors", "assert_comparable",

@@ -52,7 +52,17 @@ def compare_tables(
     statistic: str = "median",
 ) -> list[ComparisonRow]:
     """Per-case Wilcoxon comparison of the per-epoch ``median`` (default,
-    as in Fig. 28) or ``mean`` distributions."""
+    as in Fig. 28) or ``mean`` distributions.
+
+    Accepts anything exposing ``cases()``/``medians()``/``means()`` or a
+    ``to_table()`` adapter — in particular a
+    :class:`~repro.campaign.ResultStore`, so persisted campaigns compare
+    across stores and across runs without manual reloading.
+    """
+    if hasattr(table_a, "to_table"):
+        table_a = table_a.to_table()
+    if hasattr(table_b, "to_table"):
+        table_b = table_b.to_table()
     get = (lambda t, c: t.medians(c)) if statistic == "median" else (lambda t, c: t.means(c))
     keys_b = {c.key() for c in table_b.cases()}
     rows: list[ComparisonRow] = []

@@ -35,7 +35,7 @@ from typing import Any, Callable, Iterable
 
 import numpy as np
 
-from .stats import tukey_filter
+from .stats import relative_ci_width, tukey_filter
 
 __all__ = [
     "TestCase",
@@ -43,6 +43,9 @@ __all__ = [
     "MeasurementRecord",
     "EpochSummary",
     "ResultTable",
+    "case_orders",
+    "measure_case",
+    "measure_adaptive",
     "run_design",
     "analyze_records",
 ]
@@ -64,11 +67,32 @@ class TestCase:
 
 @dataclass
 class ExperimentDesign:
+    """Parameters of Algorithm 5, plus the adaptive-``nrep`` stopping rule.
+
+    ``nrep`` is the *fixed* per-case sample size. Setting ``nrep_max``
+    switches the design to sequential stopping (§3.4: "repeat until the
+    result is stable"): each case starts with ``nrep_min`` observations and
+    grows its sample until the relative CI half-width of the Tukey-filtered
+    mean falls to ``rel_ci_target``, or ``nrep_max`` observations have been
+    taken — whichever comes first. The rule is backend-agnostic: it only
+    calls ``measure`` again for another chunk, so the simulator, real jitted
+    JAX collectives and Pallas kernels all share it.
+    """
+
     n_launch_epochs: int = 30     # paper default: 30 mpiruns (§6)
-    nrep: int = 100               # measurements per case per epoch
+    nrep: int = 100               # measurements per case per epoch (fixed mode)
     shuffle: bool = True          # randomization (Alg. 5 line 9)
     outlier_filter: bool = True   # Tukey per group (Alg. 6 line 5)
     seed: int = 0
+    # --- adaptive stopping (active iff nrep_max is not None) ---
+    nrep_min: int = 10            # initial chunk / smallest defensible sample
+    nrep_max: int | None = None   # hard cap; None = fixed-nrep mode
+    rel_ci_target: float = 0.05   # stop when rel. CI half-width <= this
+    ci_level: float = 0.95
+
+    @property
+    def adaptive(self) -> bool:
+        return self.nrep_max is not None
 
 
 @dataclass
@@ -140,40 +164,75 @@ class ResultTable:
         ]
 
 
+def measure_adaptive(
+    measure: Callable[[Any, TestCase, int], np.ndarray],
+    ctx: Any,
+    case: TestCase,
+    design: ExperimentDesign,
+) -> tuple[np.ndarray, dict]:
+    """Sequential stopping for one case: sample in growing chunks until the
+    relative CI half-width of the (Tukey-filtered) mean reaches
+    ``design.rel_ci_target``, bounded by ``nrep_min``/``nrep_max``.
+
+    Returns ``(times, meta)`` where ``meta`` records ``nrep_used``,
+    ``converged`` and the final ``rel_ci`` — the provenance every stored
+    result needs to interpret its own sample size.
+    """
+    times = np.asarray(measure(ctx, case, design.nrep_min), dtype=np.float64)
+    while True:
+        kept = tukey_filter(times) if design.outlier_filter else times
+        rel = relative_ci_width(kept if kept.size else times, design.ci_level)
+        if rel <= design.rel_ci_target:
+            return times, dict(nrep_used=int(times.size), converged=True,
+                               rel_ci=float(rel))
+        remaining = design.nrep_max - times.size
+        if remaining <= 0:
+            return times, dict(nrep_used=int(times.size), converged=False,
+                               rel_ci=float(rel))
+        # grow geometrically (~1.5x) so convergence checks stay O(log n)
+        chunk = int(min(remaining, max(design.nrep_min, times.size // 2)))
+        more = np.asarray(measure(ctx, case, chunk), dtype=np.float64)
+        if more.size == 0:
+            return times, dict(nrep_used=int(times.size), converged=False,
+                               rel_ci=float(rel))
+        times = np.concatenate([times, more])
+
+
+def measure_case(
+    measure: Callable[[Any, TestCase, int], np.ndarray],
+    ctx: Any,
+    case: TestCase,
+    design: ExperimentDesign,
+) -> tuple[np.ndarray, dict]:
+    """Measure one case under the design's nrep policy (fixed or adaptive)."""
+    if design.adaptive:
+        return measure_adaptive(measure, ctx, case, design)
+    times = np.asarray(measure(ctx, case, design.nrep), dtype=np.float64)
+    return times, dict(nrep_used=int(times.size), converged=True)
+
+
 def _measure_epoch(
     epoch_factory: Callable[[int], Any],
     measure: Callable[[Any, TestCase, int], np.ndarray],
     epoch: int,
     order: list[TestCase],
-    nrep: int,
-) -> list[tuple[TestCase, np.ndarray]]:
+    design: ExperimentDesign,
+) -> list[tuple[TestCase, np.ndarray, dict]]:
     """One launch epoch: build a fresh context and measure every case in
     the given (already shuffled) order. Module-level so it can cross a
     process boundary."""
     ctx = epoch_factory(epoch)
     return [
-        (case, np.asarray(measure(ctx, case, nrep), dtype=np.float64))
+        (case, *measure_case(measure, ctx, case, design))
         for case in order
     ]
 
 
-def run_design(
-    design: ExperimentDesign,
-    epoch_factory: Callable[[int], Any],
-    measure: Callable[[Any, TestCase, int], np.ndarray],
-    cases: Iterable[TestCase],
-    n_workers: int = 1,
-) -> list[MeasurementRecord]:
-    """Algorithm 5: ``n`` launch epochs, each measuring all cases in a
-    freshly shuffled order.
-
-    With ``n_workers > 1`` the epochs — independent by the paper's own
-    design — run across a ``ProcessPoolExecutor``. Records come back in
-    the serial order (epoch-major, then shuffled case order) and are
-    bit-identical to a serial run whenever the factory/measure pair is
-    deterministic per epoch index. Falls back to the serial loop when the
-    callables cannot be pickled or no pool can be spawned.
-    """
+def case_orders(design: ExperimentDesign,
+                cases: Iterable[TestCase]) -> list[list[TestCase]]:
+    """Per-epoch case orders, drawn up front from the design seed (Alg. 5
+    line 9). Shared by :func:`run_design` and the campaign orchestrator so
+    a resumed campaign replays the exact order of the original run."""
     cases = list(cases)
     rng = np.random.default_rng(design.seed)
     orders: list[list[TestCase]] = []
@@ -183,22 +242,71 @@ def run_design(
             perm = rng.permutation(len(order))
             order = [order[i] for i in perm]
         orders.append(order)
+    return orders
 
-    per_epoch: list[list[tuple[TestCase, np.ndarray]]] | None = None
+
+def _as_backend_pair(backend_or_factory, measure):
+    """Accept either a :class:`~repro.campaign.MeasurementBackend` (has
+    ``make_epoch`` + ``measure``) or the legacy ``(epoch_factory, measure)``
+    pair; return the pair."""
+    if measure is None:
+        if not (hasattr(backend_or_factory, "make_epoch")
+                and hasattr(backend_or_factory, "measure")):
+            raise TypeError(
+                "run_design: pass a MeasurementBackend, or an epoch_factory "
+                "together with a measure callable")
+        return backend_or_factory.make_epoch, backend_or_factory.measure
+    return backend_or_factory, measure
+
+
+def run_design(
+    design: ExperimentDesign,
+    backend: Any,
+    measure: Callable[[Any, TestCase, int], np.ndarray] | None = None,
+    cases: Iterable[TestCase] | None = None,
+    n_workers: int = 1,
+) -> list[MeasurementRecord]:
+    """Algorithm 5: ``n`` launch epochs, each measuring all cases in a
+    freshly shuffled order.
+
+    ``backend`` is either a :class:`~repro.campaign.MeasurementBackend`
+    (``measure`` omitted; ``cases`` defaults to ``backend.default_cases()``)
+    or, legacy form, an ``epoch_factory`` callable paired with an explicit
+    ``measure``.
+
+    With ``n_workers > 1`` the epochs — independent by the paper's own
+    design — run across a ``ProcessPoolExecutor``. Records come back in
+    the serial order (epoch-major, then shuffled case order) and are
+    bit-identical to a serial run whenever the factory/measure pair is
+    deterministic per epoch index. Falls back to the serial loop when the
+    callables cannot be pickled or no pool can be spawned.
+    """
+    if cases is None:
+        if hasattr(backend, "default_cases"):
+            cases = backend.default_cases()
+        else:
+            raise TypeError("run_design: cases is required unless the "
+                            "backend provides default_cases()")
+    epoch_factory, measure = _as_backend_pair(backend, measure)
+    cases = list(cases)
+    orders = case_orders(design, cases)
+
+    per_epoch: list[list[tuple[TestCase, np.ndarray, dict]]] | None = None
     if n_workers and n_workers > 1 and design.n_launch_epochs > 1:
         per_epoch = _run_epochs_parallel(
             design, epoch_factory, measure, orders, n_workers)
     if per_epoch is None:
         per_epoch = [
             _measure_epoch(epoch_factory, measure, epoch, orders[epoch],
-                           design.nrep)
+                           design)
             for epoch in range(design.n_launch_epochs)
         ]
 
     records: list[MeasurementRecord] = []
     for epoch, results in enumerate(per_epoch):
-        for case, times in results:
-            records.append(MeasurementRecord(case=case, epoch=epoch, times=times))
+        for case, times, meta in results:
+            records.append(MeasurementRecord(case=case, epoch=epoch,
+                                             times=times, meta=meta))
     return records
 
 
@@ -227,7 +335,7 @@ def _run_epochs_parallel(design, epoch_factory, measure, orders, n_workers):
         ) as pool:
             futures = [
                 pool.submit(_measure_epoch, epoch_factory, measure, epoch,
-                            orders[epoch], design.nrep)
+                            orders[epoch], design)
                 for epoch in range(design.n_launch_epochs)
             ]
             return [f.result() for f in futures]

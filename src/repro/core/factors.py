@@ -41,6 +41,16 @@ class FactorSet:
     window_size_us: float = 0.0
     n_launch_epochs: int = 1
     nrep: int = 0
+    # adaptive-nrep stopping contract (0/0 = fixed nrep): the stopping rule
+    # changes the sample-size distribution, so it is itself a factor.
+    nrep_min: int = 0
+    nrep_max: int = 0
+    rel_ci_target: float = 0.0
+    # design identity: two campaigns with different seeds or randomization
+    # are different experiments and must not share a store fingerprint.
+    design_seed: int = 0
+    shuffle: bool = True
+    measurement_backend: str = ""      # sim | jax | kernel | "" (ad hoc)
     epoch_isolation: str = "process"   # process | clear_caches | none
     xla_flags: str = ""
     matmul_precision: str = "default"

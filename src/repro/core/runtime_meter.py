@@ -57,7 +57,13 @@ class MeterConfig:
 
 
 class JaxEpochContext:
-    """Per-epoch context: builds (and owns) freshly-jitted callables."""
+    """Per-epoch context: builds (and owns) freshly-jitted callables.
+
+    Warm-up is paid once per callable per epoch: adaptive-``nrep`` stopping
+    asks for a sample in growing chunks, and re-warming every chunk would
+    both waste wall-clock and re-measure the §5.8 cold-cache factor the
+    epoch already amortized.
+    """
 
     def __init__(self, build: Callable[[int], dict[str, Callable[[], Any]]],
                  epoch: int, config: MeterConfig):
@@ -69,10 +75,13 @@ class JaxEpochContext:
             jax.clear_caches()
             gc.collect()
         self.callables = build(epoch)
+        self._warmed: set[str] = set()
 
     def measure(self, name: str, nrep: int) -> np.ndarray:
         fn = self.callables[name]
-        return timed_calls(fn, nrep, warmup=self.config.warmup)
+        warmup = 0 if name in self._warmed else self.config.warmup
+        self._warmed.add(name)
+        return timed_calls(fn, nrep, warmup=warmup)
 
 
 def make_jax_measure(build: Callable[[int], dict[str, Callable[[], Any]]],

@@ -27,6 +27,7 @@ __all__ = [
     "normal_ppf",
     "t_ppf",
     "mean_confidence_interval",
+    "relative_ci_width",
     "RankSumResult",
     "wilcoxon_rank_sum",
     "significance_stars",
@@ -122,6 +123,24 @@ def mean_confidence_interval(x: np.ndarray, level: float = 0.95) -> tuple[float,
     q = 0.5 + level / 2.0
     crit = t_ppf(q, n - 1) if n <= 60 else normal_ppf(q)
     return m, m - crit * se, m + crit * se
+
+
+def relative_ci_width(x: np.ndarray, level: float = 0.95) -> float:
+    """Relative half-width of the CI of the mean: ``(hi - lo) / (2 |mean|)``.
+
+    The precision measure behind sequential (adaptive-``nrep``) stopping:
+    SKaMPI-style benchmarks repeat a measurement until this drops below a
+    target fraction (§3.4's "repeat until the result is stable"). Returns
+    ``inf`` when the sample is too small (n < 2) or the mean is zero, so a
+    caller's ``rel <= target`` check naturally keeps sampling.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    if x.size < 2:
+        return float("inf")
+    m, lo, hi = mean_confidence_interval(x, level)
+    if m == 0.0:
+        return float("inf")
+    return float((hi - lo) / (2.0 * abs(m)))
 
 
 # ---------------------------------------------------------------------------

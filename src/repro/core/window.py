@@ -72,6 +72,25 @@ class WindowRun:
     def invalid_fraction(self) -> float:
         return float(np.mean(~self.valid)) if self.times.size else 0.0
 
+    @classmethod
+    def concat(cls, runs: "list[WindowRun]") -> "WindowRun":
+        """Merge consecutive chunks over the same ``(net, sync, op)`` into
+        one campaign — the accumulation step of adaptive-``nrep``
+        measurement and of valid-sample top-up after window discards."""
+        runs = list(runs)
+        if not runs:
+            raise ValueError("WindowRun.concat: empty run list")
+        if len(runs) == 1:
+            return runs[0]
+        return cls(
+            times=np.concatenate([r.times for r in runs]),
+            errors=np.concatenate([r.errors for r in runs]),
+            start_global_est=np.vstack([r.start_global_est for r in runs]),
+            end_global_est=np.vstack([r.end_global_est for r in runs]),
+            start_true=np.vstack([r.start_true for r in runs]),
+            end_true=np.vstack([r.end_true for r in runs]),
+        )
+
 
 def _clocks_affine(net: SimNet, ranks: list[int]) -> bool:
     """True when every participating clock is a pure affine map of true

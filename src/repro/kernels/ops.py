@@ -11,13 +11,14 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .flash_attention.kernel import flash_attention_fwd
 from .flash_attention.ref import flash_attention_ref
 from .ssd_scan.kernel import ssd_scan_fwd
 from .ssd_scan.ref import ssd_chunked_ref
 
-__all__ = ["flash_attention", "ssd_scan"]
+__all__ = ["flash_attention", "ssd_scan", "make_benchmark_op", "BENCHMARK_OPS"]
 
 
 def _auto_interpret(interpret):
@@ -63,3 +64,71 @@ def ssd_scan(x, dta, B, C, *, chunk=256, head_group=8, interpret=None):
         return y
     return ssd_scan_fwd(x, dta, B, C, chunk=chunk, head_group=head_group,
                         interpret=_auto_interpret(interpret))
+
+
+# ---------------------------------------------------------------------------
+# Operations-under-test for the measurement campaign (repro.campaign)
+# ---------------------------------------------------------------------------
+
+BENCHMARK_OPS = ("flash_attention", "ssd_scan")
+
+
+def make_benchmark_op(op: str, impl: str = "pallas", *, seq: int,
+                      batch: int = 1, heads: int = 4, kv_heads: int | None = None,
+                      head_dim: int = 32, state_dim: int = 16,
+                      dtype=jnp.float32, seed: int = 0,
+                      interpret=None):
+    """Build a nullary jitted callable running one forward of ``op`` at
+    sequence length ``seq`` — the operation-under-test factory for
+    :class:`repro.campaign.KernelBackend`.
+
+    ``impl="pallas"`` times the Pallas kernel (interpret mode off-TPU);
+    ``impl="ref"`` times the pure-jnp oracle. Block/chunk sizes are clamped
+    to divide ``seq`` so the Pallas path never silently falls back to the
+    reference — a fallback would make the A-vs-B comparison measure the
+    same code twice.
+    """
+    if op not in BENCHMARK_OPS:
+        raise ValueError(f"unknown benchmark op {op!r}; one of {BENCHMARK_OPS}")
+    if impl not in ("pallas", "ref"):
+        raise ValueError(f"unknown impl {impl!r}; use 'pallas' or 'ref'")
+    rng = np.random.default_rng(seed + 7919 * seq)
+    kv_heads = heads if kv_heads is None else kv_heads
+
+    def _t(*shape, scale=1.0):
+        return jnp.asarray(rng.normal(0.0, scale, shape), dtype)
+
+    if op == "flash_attention":
+        block = seq if seq <= 128 else 128
+        if seq % block:
+            raise ValueError(f"seq={seq} must be a multiple of {block} for "
+                             "the Pallas flash-attention grid")
+        q = _t(batch, seq, heads, head_dim)
+        k = _t(batch, seq, kv_heads, head_dim)
+        v = _t(batch, seq, kv_heads, head_dim)
+        if impl == "pallas":
+            fn = jax.jit(lambda q, k, v: flash_attention(
+                q, k, v, causal=True, block_q=block, block_k=block,
+                interpret=_auto_interpret(interpret)))
+        else:
+            fn = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v,
+                                                             causal=True))
+        return lambda: fn(q, k, v)
+
+    chunk = seq if seq <= 64 else 64
+    if seq % chunk:
+        raise ValueError(f"seq={seq} must be a multiple of {chunk} for the "
+                         "chunked SSD scan")
+    hg = heads if heads <= 8 else 8
+    x = _t(batch, seq, heads, head_dim)
+    dta = -jnp.abs(_t(batch, seq, heads, scale=0.5)) - 0.05
+    B = _t(batch, seq, state_dim)
+    C = _t(batch, seq, state_dim)
+    if impl == "pallas":
+        fn = jax.jit(lambda x, dta, B, C: ssd_scan(
+            x, dta, B, C, chunk=chunk, head_group=hg,
+            interpret=_auto_interpret(interpret)))
+    else:
+        fn = jax.jit(lambda x, dta, B, C: ssd_chunked_ref(x, dta, B, C,
+                                                          chunk)[0])
+    return lambda: fn(x, dta, B, C)

@@ -1,0 +1,39 @@
+"""Shared test configuration.
+
+Requests 4 host CPU devices (``--xla_force_host_platform_device_count``)
+*before* the first JAX import in the test process, so
+:class:`repro.campaign.JaxBackend` multi-device tests can run on a single
+host. Tests that need a real device mesh carry the ``jaxdevices`` marker
+and are auto-skipped when JAX still cannot provide enough devices (e.g.
+the flag was already consumed by an earlier backend initialization, or an
+explicit ``XLA_FLAGS`` overrode it).
+"""
+
+import os
+
+import pytest
+
+_REQUIRED_DEVICES = 4
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        f"{_flags} --xla_force_host_platform_device_count={_REQUIRED_DEVICES}"
+    ).strip()
+
+
+def pytest_collection_modifyitems(config, items):
+    marked = [it for it in items if it.get_closest_marker("jaxdevices")]
+    if not marked:
+        return
+    import jax
+
+    have = jax.device_count()
+    for item in marked:
+        marker = item.get_closest_marker("jaxdevices")
+        need = marker.kwargs.get("n", marker.args[0] if marker.args
+                                 else _REQUIRED_DEVICES)
+        if have < need:
+            item.add_marker(pytest.mark.skip(
+                reason=f"needs >= {need} JAX devices, have {have} "
+                       "(--xla_force_host_platform_device_count)"))
