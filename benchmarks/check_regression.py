@@ -1,0 +1,113 @@
+"""CI perf gate: compare a fresh ``benchmarks.run --json`` report against
+the committed baseline and fail on wall-clock regressions.
+
+Usage::
+
+    python -m benchmarks.run --only micro --json fresh.json
+    python benchmarks/check_regression.py benchmarks/baseline.json fresh.json \
+        --tolerance 2.0
+
+Two gates, both with the same configurable tolerance:
+
+  * per-bench wall-clock (the ``seconds`` field): ``fresh <= tolerance *
+    baseline``. Wall-clock across runner generations is noisy, so the
+    default tolerance is a deliberately loose 2x — this catches
+    order-of-magnitude blowups, not 10% drift;
+  * *speedup rows* (row name containing ``speedup``, whose value is a
+    within-run ratio like batch-vs-scalar): ``fresh >= baseline /
+    tolerance``. A within-run ratio cancels machine speed entirely, so
+    this is the robust detector for the "vectorized engine silently fell
+    back to the scalar loop" class of regression even on a runner much
+    slower or faster than the one that recorded the baseline.
+
+A bench present in the baseline but missing (or erroring) in the fresh
+report fails the gate; *new* benches in the fresh report pass with a note,
+so adding a benchmark does not require touching the baseline in the same
+commit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_benches(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        report = json.load(f)
+    return {b["name"]: b for b in report.get("benches", [])}
+
+
+def _speedup_rows(benches: dict[str, dict]) -> dict[str, float]:
+    return {r["name"]: float(r["us_per_call"])
+            for b in benches.values() for r in b.get("rows", [])
+            if "speedup" in r["name"]}
+
+
+def check(baseline: dict[str, dict], fresh: dict[str, dict],
+          tolerance: float) -> int:
+    failures = 0
+    print(f"{'bench':<36} {'base[s]':>9} {'fresh[s]':>9} {'ratio':>7}  gate")
+    for name, base in sorted(baseline.items()):
+        base_s = float(base["seconds"])
+        fb = fresh.get(name)
+        if fb is None:
+            print(f"{name:<36} {base_s:>9.3f} {'-':>9} {'-':>7}  FAIL (missing)")
+            failures += 1
+            continue
+        if fb.get("error"):
+            print(f"{name:<36} {base_s:>9.3f} {'-':>9} {'-':>7}  "
+                  f"FAIL ({fb['error']})")
+            failures += 1
+            continue
+        fresh_s = float(fb["seconds"])
+        ratio = fresh_s / base_s if base_s > 0 else float("inf")
+        ok = fresh_s <= tolerance * base_s
+        print(f"{name:<36} {base_s:>9.3f} {fresh_s:>9.3f} {ratio:>7.2f}  "
+              f"{'ok' if ok else f'FAIL (> {tolerance:g}x)'}")
+        if not ok:
+            failures += 1
+    for name in sorted(set(fresh) - set(baseline)):
+        print(f"{name:<36} {'-':>9} {float(fresh[name]['seconds']):>9.3f} "
+              f"{'-':>7}  ok (new bench, no baseline)")
+    # machine-independent gate: within-run speedup ratios must not collapse
+    base_sp, fresh_sp = _speedup_rows(baseline), _speedup_rows(fresh)
+    for name, base_x in sorted(base_sp.items()):
+        fresh_x = fresh_sp.get(name)
+        if fresh_x is None:
+            print(f"{name:<36} {base_x:>8.1f}x {'-':>9} {'-':>7}  "
+                  "FAIL (speedup row missing)")
+            failures += 1
+            continue
+        ok = fresh_x >= base_x / tolerance
+        print(f"{name:<36} {base_x:>8.1f}x {fresh_x:>8.1f}x "
+              f"{fresh_x / base_x:>7.2f}  "
+              f"{'ok' if ok else f'FAIL (< 1/{tolerance:g} of baseline)'}")
+        if not ok:
+            failures += 1
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed baseline JSON "
+                                     "(benchmarks/baseline.json)")
+    ap.add_argument("fresh", help="fresh --json report to gate")
+    ap.add_argument("--tolerance", type=float, default=2.0,
+                    help="fail when fresh > tolerance * baseline wall-clock "
+                         "(default 2.0)")
+    args = ap.parse_args()
+    if args.tolerance <= 0:
+        ap.error("--tolerance must be positive")
+    failures = check(load_benches(args.baseline), load_benches(args.fresh),
+                     args.tolerance)
+    if failures:
+        print(f"perf gate: {failures} regression(s) beyond "
+              f"{args.tolerance:g}x baseline", file=sys.stderr)
+        raise SystemExit(1)
+    print("perf gate: ok", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,13 @@ Options:
                   already-measured cells are loaded, not re-measured)
   --compare A B   compare two stores' campaigns per test case (Wilcoxon on
                   per-epoch medians, Fig. 28 style) and exit
+  --guidelines    verify the PGMPI-style performance-guideline family
+                  instead of running the suite; ``--only`` selects the
+                  backend (``sim`` default, or ``kernel``), ``--store``
+                  makes the verification campaign resumable, ``--seed``
+                  re-rolls it. Exits non-zero when a guideline is VIOLATED
+                  (family-wise Holm-corrected alpha = 0.05), so it can gate
+                  CI directly.
 """
 
 from __future__ import annotations
@@ -55,12 +62,54 @@ def _compare_stores(ap, path_a: str, path_b: str) -> None:
     if diffs:
         print(f"# note: factor sets differ in {diffs} — treat these as the "
               "factors under test", file=sys.stderr)
-    rows = compare_tables(store_a, store_b)
-    if not rows:
-        print("# no common test cases between the two stores", file=sys.stderr)
-        return
+    try:
+        rows = compare_tables(store_a, store_b)
+    except ValueError as e:   # no common (op, msize) cells
+        ap.error(f"--compare: {e}")
     print(format_comparison(rows, name_a=os.path.basename(path_a),
                             name_b=os.path.basename(path_b)))
+
+
+def _run_guidelines(ap, args) -> None:
+    """Guideline-verification mode: the repo auditing an implementation
+    (here: the simulated MPI library, or the Pallas kernels vs. their jnp
+    oracles) instead of benchmarking itself."""
+    from repro.campaign import KernelBackend, ResultStore, SimBackend
+    from repro.core import ExperimentDesign
+    from repro.guidelines import (default_guidelines, format_report,
+                                  format_violations, verify_guidelines)
+
+    backend_name = args.only or "sim"
+    if backend_name == "sim":
+        backend = SimBackend(p=8, seed0=args.seed)
+        design = ExperimentDesign(n_launch_epochs=10, nrep_min=20,
+                                  nrep_max=150, rel_ci_target=0.05,
+                                  seed=args.seed)
+    elif backend_name == "kernel":
+        # interpret mode off-TPU: the "pallas <= ref" guideline is expected
+        # to fail there — the verdict names the emulation factor, which is
+        # the point of carrying factors on every result. Lighter design:
+        # a kernel launch epoch pays a real re-jit, unlike a simulated one.
+        backend = KernelBackend(seed0=args.seed)
+        design = ExperimentDesign(n_launch_epochs=6, nrep_min=10,
+                                  nrep_max=40, rel_ci_target=0.10,
+                                  seed=args.seed)
+    else:
+        ap.error(f"--guidelines: unknown backend {backend_name!r} "
+                 "(--only sim|kernel)")
+    guidelines = default_guidelines(backend_name)
+    store = ResultStore(args.store) if args.store else None
+    report = verify_guidelines(guidelines, backend, design=design,
+                               store=store)
+    print(format_report(report,
+                        title=f"performance guidelines [{backend_name}]"))
+    if store is not None:
+        print(f"# store: {args.store} (resumable; "
+              f"{report.n_resumed} cells loaded, "
+              f"{report.n_measured} measured this run)", file=sys.stderr)
+    if not report.ok:
+        print(format_violations(report), file=sys.stderr)
+        raise SystemExit(1)
 
 
 def main() -> None:
@@ -81,12 +130,19 @@ def main() -> None:
     ap.add_argument("--compare", nargs=2, default=None,
                     metavar=("STOREA", "STOREB"),
                     help="print the Wilcoxon comparison of two stores and exit")
+    ap.add_argument("--guidelines", action="store_true",
+                    help="verify performance guidelines (PGMPI) and exit; "
+                         "--only picks the backend (sim|kernel)")
     args = ap.parse_args()
     if args.seed < 0:
         ap.error("--seed must be >= 0 (it offsets non-negative RNG seeds)")
 
     if args.compare:
         _compare_stores(ap, *args.compare)
+        return
+
+    if args.guidelines:
+        _run_guidelines(ap, args)
         return
 
     from benchmarks import suite

@@ -17,7 +17,6 @@ import numpy as np
 
 from repro.core import wilcoxon_rank_sum
 from repro.data.pipeline import DataConfig, SyntheticLM
-from repro.launch.steps import make_train_step
 from repro.models import ModelConfig, init_params
 from repro.optim import OptimizerConfig, adamw_update, init_opt_state
 from repro.optim.compress import error_feedback_update

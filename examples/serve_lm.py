@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.configs import ARCHS, get_smoke
 from repro.core.stats import mean_confidence_interval, tukey_filter
-from repro.models import decode_step, init_cache, init_params, prefill
+from repro.models import decode_step, init_params, prefill
 
 
 def main():

@@ -30,7 +30,8 @@ import numpy as np
 
 from repro.core.design import ExperimentDesign, TestCase
 from repro.core.factors import FactorSet, capture_factors
-from repro.core.mpi_ops import make_op
+from repro.core.mpi_ops import make_composite_op
+from repro.core.opexpr import parse_opexpr
 from repro.core.runtime_meter import JaxEpochContext, MeterConfig
 from repro.core.simnet import SimNet
 from repro.core.sync import make_sync
@@ -45,6 +46,23 @@ __all__ = [
 ]
 
 _SYNC_KW = dict(n_fitpts=200, n_exchanges=40)
+
+
+def _sequence_calls(fns):
+    """One timed callable running ``fns`` back to back — the composite
+    mock-up region. The epoch meter blocks on the *returned* value only,
+    so return the last term's output (each prior dispatch is enqueued
+    before it and completes under JAX's per-device program order)."""
+    if len(fns) == 1:
+        return fns[0]
+
+    def composite():
+        out = None
+        for f in fns:
+            out = f()
+        return out
+
+    return composite
 
 
 @runtime_checkable
@@ -99,7 +117,10 @@ class _SimEpoch:
 
     def op(self, name: str):
         if name not in self._ops:
-            self._ops[name] = make_op(name, **self.backend.op_kw)
+            # `name` may be a composite op expression (a guideline mock-up
+            # such as "scatter+allgather" or "allreduce@half+allreduce@half")
+            self._ops[name] = make_composite_op(
+                name, per_op_kw=self.backend.per_op_kw, **self.backend.op_kw)
         return self._ops[name]
 
 
@@ -108,16 +129,21 @@ class SimBackend:
     """Simulated cluster measured through window-based synchronization.
 
     ``case.op`` selects the collective's cost-model preset (unknown names
-    get the generic model), ``case.msize`` the message size; ``op_kw``
-    overrides apply to every case, which is how two "MPI libraries" with
-    different latency terms are modeled. Window discards (START_LATE /
-    TOOK_TOO_LONG) are topped up so the returned sample has ~``nrep``
-    valid observations.
+    get the generic model) — or a composite op *expression* (see
+    :mod:`repro.core.opexpr`) sequencing several collectives inside one
+    timed region, the mock-up side of a performance guideline. ``case.msize``
+    is the message size; ``op_kw`` overrides apply to every case, which is
+    how two "MPI libraries" with different latency terms are modeled, and
+    ``per_op_kw`` overrides one named collective only (how a single
+    mis-tuned collective — the thing guideline verification exists to catch
+    — is seeded). Window discards (START_LATE / TOOK_TOO_LONG) are topped
+    up so the returned sample has ~``nrep`` valid observations.
     """
 
     p: int = 8
     seed0: int = 0
     op_kw: dict = field(default_factory=dict)
+    per_op_kw: dict = field(default_factory=dict)
     sync_name: str = "hca"
     sync_kw: dict = field(default_factory=lambda: dict(_SYNC_KW))
     win_size: float = 400e-6
@@ -155,6 +181,9 @@ class SimBackend:
             epoch_isolation="process",
             extra=(("p", self.p), ("seed0", self.seed0),
                    ("op_kw", tuple(sorted(self.op_kw.items()))),
+                   ("per_op_kw", tuple(sorted(
+                       (op, tuple(sorted(kw.items())))
+                       for op, kw in self.per_op_kw.items()))),
                    ("sync_kw", tuple(sorted(self.sync_kw.items()))),
                    ("engine", self.engine)),
             **_design_factor_kw(design),
@@ -214,12 +243,12 @@ class JaxBackend:
                 "available — set --xla_force_host_platform_device_count")
         return n
 
-    def _build_collective(self, op: str, msize: int):
+    def _build_collective(self, op: str, msize: int, n: int | None = None):
         import jax
         import jax.numpy as jnp
         from jax import lax
 
-        n = self._ndev()
+        n = self._ndev() if n is None else n
         itemsize = jnp.dtype(self.dtype).itemsize
         # per-device payload, padded so all_to_all's split axis divides
         count = max(n, int(np.ceil(msize / itemsize)))
@@ -244,6 +273,23 @@ class JaxBackend:
             (n,) + (1,) * (len(shape) - 1))
         return lambda: f(x)
 
+    def _build_case(self, opexpr: str, msize: int):
+        """Build the timed callable for a case — a single collective, or a
+        composite mock-up expression sequencing several collectives inside
+        one timed region (``"reduce+bcast"``-style guideline sides;
+        ``@half`` runs a term over half the mesh, the split-robustness
+        mock-up)."""
+        terms = parse_opexpr(opexpr)
+        n = self._ndev()
+        fns = []
+        for t in terms:
+            if t.impl is not None:
+                raise ValueError(f"JaxBackend: '#{t.impl}' implementation "
+                                 f"tags are not supported (case {opexpr!r})")
+            tn = max(2, n // 2) if t.procs == "half" else n
+            fns.append(self._build_collective(t.op, t.msize(msize), n=tn))
+        return _sequence_calls(fns)
+
     def make_epoch(self, epoch: int) -> JaxEpochContext:
         def build(_epoch: int) -> dict:
             return {}  # callables are built lazily, one per case
@@ -255,7 +301,7 @@ class JaxBackend:
                 nrep: int) -> np.ndarray:
         key = f"{case.op}@{case.msize}"
         if key not in ctx.callables:
-            ctx.callables[key] = self._build_collective(case.op, case.msize)
+            ctx.callables[key] = self._build_case(case.op, case.msize)
         return ctx.measure(key, nrep)
 
     def factors(self, design: ExperimentDesign) -> FactorSet:
@@ -289,6 +335,14 @@ class KernelBackend:
     ``impl="pallas"`` and one with ``impl="ref"``, then
     :func:`~repro.core.compare.compare_tables` answers "is the kernel
     faster?" the statistically sound way.
+
+    A case may also be an op *expression* (:mod:`repro.core.opexpr`): a
+    ``#impl`` tag overrides the backend-level ``impl`` for that term, so
+    the guideline ``"flash_attention#pallas" <= "flash_attention#ref"``
+    (the kernel must not lose to its own jnp oracle) runs both sides in
+    the *same* campaign, and ``+`` sequences kernels inside one timed
+    region. ``@half`` has no meaning for single-device kernels and is
+    rejected.
     """
 
     impl: str = "pallas"              # pallas | ref
@@ -310,17 +364,27 @@ class KernelBackend:
 
         return JaxEpochContext(build, epoch, self.meter)
 
-    def measure(self, ctx: JaxEpochContext, case: TestCase,
-                nrep: int) -> np.ndarray:
+    def _build_case(self, opexpr: str, msize: int, epoch: int):
         from repro.kernels.ops import make_benchmark_op
 
+        fns = []
+        for t in parse_opexpr(opexpr):
+            if t.procs == "half":
+                raise ValueError("KernelBackend: '@half' has no meaning for "
+                                 f"single-device kernels (case {opexpr!r})")
+            fns.append(make_benchmark_op(
+                t.op, t.impl or self.impl, seq=t.msize(msize),
+                batch=self.batch, heads=self.heads, kv_heads=self.kv_heads,
+                head_dim=self.head_dim, state_dim=self.state_dim,
+                seed=self.seed0 + epoch, interpret=self.interpret))
+        return _sequence_calls(fns)
+
+    def measure(self, ctx: JaxEpochContext, case: TestCase,
+                nrep: int) -> np.ndarray:
         key = f"{case.op}@{case.msize}"
         if key not in ctx.callables:
-            ctx.callables[key] = make_benchmark_op(
-                case.op, self.impl, seq=case.msize, batch=self.batch,
-                heads=self.heads, kv_heads=self.kv_heads,
-                head_dim=self.head_dim, state_dim=self.state_dim,
-                seed=self.seed0 + ctx.epoch, interpret=self.interpret)
+            ctx.callables[key] = self._build_case(case.op, case.msize,
+                                                  ctx.epoch)
         return ctx.measure(key, nrep)
 
     def factors(self, design: ExperimentDesign) -> FactorSet:

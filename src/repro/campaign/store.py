@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import json
 import os
+import warnings
 from pathlib import Path
 from typing import Iterable
 
@@ -89,14 +90,25 @@ class ResultStore:
         if not self.path.exists():
             return
         with open(self.path) as f:
-            for line in f:
+            for lineno, line in enumerate(f, start=1):
                 line = line.strip()
                 if not line:
                     continue
                 try:
                     yield json.loads(line)
                 except json.JSONDecodeError:
-                    continue  # truncated tail line from a crashed writer
+                    # A truncated tail line (crashed writer) is expected and
+                    # safe to drop — the cell was never fully measured — but
+                    # dropping it *silently* hides that a campaign was
+                    # killed mid-write; a bad line before the tail means
+                    # real corruption and deserves the louder wording.
+                    warnings.warn(
+                        f"{self.path}:{lineno}: dropping undecodable JSONL "
+                        "line (truncated write from a killed campaign, or "
+                        "file corruption); the cell it held will be "
+                        "re-measured on resume", RuntimeWarning,
+                        stacklevel=3)
+                    continue
 
     def fingerprints(self) -> list[str]:
         """Campaign fingerprints in file (declaration) order."""

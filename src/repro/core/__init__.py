@@ -9,7 +9,7 @@ functions (see DESIGN.md §2 for the hardware-adaptation map).
 """
 
 from .clocks import IDENTITY_MODEL, AdjustedClock, Clock, LinearModel, PerfClock, SimClock, linear_fit
-from .compare import ComparisonRow, compare_tables, format_comparison, naive_comparison
+from .compare import ComparisonRow, compare_cases, compare_tables, format_comparison, naive_comparison
 from .design import (
     EpochSummary,
     ExperimentDesign,
@@ -23,12 +23,22 @@ from .design import (
     run_design,
 )
 from .factors import FactorSet, assert_comparable, capture_factors
-from .mpi_ops import OP_LIBRARY, BatchExecution, CollectiveExecution, SimCollective, make_op
+from .mpi_ops import (
+    OP_LIBRARY,
+    BatchExecution,
+    CollectiveExecution,
+    SimCollective,
+    SimCompositeOp,
+    make_composite_op,
+    make_op,
+)
+from .opexpr import OpTerm, format_opexpr, is_composite, parse_opexpr
 from .simnet import ClockParams, NetParams, SimNet
 from .stats import (
     autocorr_significant_lags,
     autocorrelation,
     coefficient_of_variation,
+    holm_bonferroni,
     jarque_bera,
     mean_confidence_interval,
     normal_ppf,
@@ -57,8 +67,11 @@ __all__ = [
     "Clock", "PerfClock", "SimClock", "AdjustedClock", "LinearModel",
     "IDENTITY_MODEL", "linear_fit",
     # simulation
-    "SimNet", "NetParams", "ClockParams", "SimCollective",
-    "CollectiveExecution", "BatchExecution", "make_op", "OP_LIBRARY",
+    "SimNet", "NetParams", "ClockParams", "SimCollective", "SimCompositeOp",
+    "CollectiveExecution", "BatchExecution", "make_op", "make_composite_op",
+    "OP_LIBRARY",
+    # op expressions (guideline mock-ups)
+    "OpTerm", "parse_opexpr", "is_composite", "format_opexpr",
     # sync
     "ALGORITHMS", "make_sync", "SkampiSync", "NetgaugeSync", "JKSync",
     "HCASync", "SyncResult", "probe_offsets", "true_offsets",
@@ -66,7 +79,8 @@ __all__ = [
     "run_windowed", "run_windowed_scalar", "WindowRun", "run_barrier_timed",
     "BarrierRun", "probe_barrier_skew",
     # statistics
-    "tukey_filter", "wilcoxon_rank_sum", "significance_stars",
+    "tukey_filter", "wilcoxon_rank_sum", "holm_bonferroni",
+    "significance_stars",
     "mean_confidence_interval", "jarque_bera", "autocorrelation",
     "autocorr_significant_lags", "coefficient_of_variation", "normal_ppf",
     "t_ppf", "relative_ci_width",
@@ -74,7 +88,8 @@ __all__ = [
     "ExperimentDesign", "TestCase", "run_design", "analyze_records",
     "ResultTable", "EpochSummary", "MeasurementRecord", "case_orders",
     "measure_case", "measure_adaptive",
-    "compare_tables", "ComparisonRow", "naive_comparison", "format_comparison",
+    "compare_tables", "compare_cases", "ComparisonRow", "naive_comparison",
+    "format_comparison",
     # factors
     "FactorSet", "capture_factors", "assert_comparable",
 ]

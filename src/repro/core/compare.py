@@ -17,7 +17,8 @@ import numpy as np
 from .design import ResultTable, TestCase
 from .stats import significance_stars, wilcoxon_rank_sum
 
-__all__ = ["ComparisonRow", "compare_tables", "naive_comparison", "format_comparison"]
+__all__ = ["ComparisonRow", "compare_tables", "compare_cases",
+           "naive_comparison", "format_comparison"]
 
 
 @dataclass
@@ -58,6 +59,12 @@ def compare_tables(
     ``to_table()`` adapter — in particular a
     :class:`~repro.campaign.ResultStore`, so persisted campaigns compare
     across stores and across runs without manual reloading.
+
+    Raises :class:`ValueError` when the two tables share no ``(op, msize)``
+    cell with data on both sides — an empty comparison almost always means
+    the wrong stores (or the wrong fingerprints) were paired, and silently
+    returning an empty table turns that mistake into a vacuous "no
+    significant difference" downstream.
     """
     if hasattr(table_a, "to_table"):
         table_a = table_a.to_table()
@@ -73,20 +80,54 @@ def compare_tables(
         b = get(table_b, case)
         if a.size == 0 or b.size == 0:
             continue
-        rows.append(
-            ComparisonRow(
-                case=case,
-                avg_a=float(np.mean(a)),
-                avg_b=float(np.mean(b)),
-                ratio=float(np.mean(a) / np.mean(b)) if np.mean(b) else float("nan"),
-                p_two_sided=wilcoxon_rank_sum(a, b, "two-sided").p_value,
-                p_a_less=wilcoxon_rank_sum(a, b, "less").p_value,
-                p_a_greater=wilcoxon_rank_sum(a, b, "greater").p_value,
-                n_a=int(a.size),
-                n_b=int(b.size),
-            )
-        )
+        rows.append(_compare_row(case, a, b))
+    if not rows:
+        ka = sorted(c.key() for c in table_a.cases())
+        kb = sorted(c.key() for c in table_b.cases())
+        raise ValueError(
+            "compare_tables: no common (op, msize) cells with data on both "
+            f"sides — A has {ka or 'no cases'}, B has {kb or 'no cases'}. "
+            "Check that the right stores/fingerprints were paired.")
     return rows
+
+
+def _compare_row(case: TestCase, a: np.ndarray, b: np.ndarray) -> ComparisonRow:
+    return ComparisonRow(
+        case=case,
+        avg_a=float(np.mean(a)),
+        avg_b=float(np.mean(b)),
+        ratio=float(np.mean(a) / np.mean(b)) if np.mean(b) else float("nan"),
+        p_two_sided=wilcoxon_rank_sum(a, b, "two-sided").p_value,
+        p_a_less=wilcoxon_rank_sum(a, b, "less").p_value,
+        p_a_greater=wilcoxon_rank_sum(a, b, "greater").p_value,
+        n_a=int(a.size),
+        n_b=int(b.size),
+    )
+
+
+def compare_cases(
+    table: ResultTable,
+    case_a: TestCase,
+    case_b: TestCase,
+    statistic: str = "median",
+) -> ComparisonRow:
+    """Wilcoxon comparison of two *cases inside one table* — the primitive
+    of guideline verification (PGMPI): both sides of ``lhs <= rhs`` are
+    measured in the same campaign (same launch epochs, same factor set),
+    and their per-epoch ``median`` (default) or ``mean`` distributions are
+    compared. The returned row's ``case`` is ``case_a`` (the lhs).
+    """
+    if hasattr(table, "to_table"):
+        table = table.to_table()
+    get = (lambda c: table.medians(c)) if statistic == "median" \
+        else (lambda c: table.means(c))
+    a, b = get(case_a), get(case_b)
+    if a.size == 0 or b.size == 0:
+        missing = [c.key() for c, x in ((case_a, a), (case_b, b))
+                   if x.size == 0]
+        raise ValueError(f"compare_cases: no data for {missing}; table has "
+                         f"{sorted(c.key() for c in table.cases())}")
+    return _compare_row(case_a, a, b)
 
 
 def naive_comparison(table_a: ResultTable, table_b: ResultTable,

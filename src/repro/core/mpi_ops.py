@@ -41,10 +41,12 @@ from .simnet import SimNet
 
 __all__ = [
     "SimCollective",
+    "SimCompositeOp",
     "CollectiveExecution",
     "BatchExecution",
     "OP_LIBRARY",
     "make_op",
+    "make_composite_op",
 ]
 
 
@@ -261,6 +263,96 @@ class SimCollective:
             start = np.maximum(min_start_true, prev_end)
         net.t[ranks] = end[-1]
         return BatchExecution(start_true=start, end_true=end, durations=dur)
+
+
+@dataclass
+class SimCompositeOp(SimCollective):
+    """A guideline mock-up: constituent collectives run back to back.
+
+    ``terms`` holds ``(op, msize_scale, p_scale)`` triples. One call of the
+    composite is every term executed in sequence inside one timed region —
+    its common duration is the *sum* of the terms' sampled durations, each
+    term at its own message size (``round(msize_scale * msize)``) and
+    process count (``round(p_scale * p)``, the split-robustness mock-up
+    ``p -> p/2 + p/2``). Entry/exit semantics (synchronizing-collective
+    all-in rule, per-rank finish imbalance) are inherited unchanged from
+    :class:`SimCollective`, so the composite runs through
+    :func:`~repro.core.window.run_windowed`'s batch and scalar engines like
+    any other op. Each constituent keeps its own AR(1) state and per-epoch
+    bias, so the composite's noise structure is the sum of its parts'.
+    """
+
+    terms: tuple = ()   # tuple[(SimCollective, float msize_scale, float p_scale)]
+
+    def __post_init__(self):
+        if self.terms:
+            # the slowest-rank exit spread of the sequence is dominated by
+            # its most imbalanced constituent
+            self.rank_imbalance = max(op.rank_imbalance
+                                      for op, _, _ in self.terms)
+
+    @staticmethod
+    def _term_p(p: int, p_scale: float) -> int:
+        return max(2, int(round(p_scale * p)))
+
+    def base_time(self, p: int, msize: int) -> float:
+        return sum(op.base_time(self._term_p(p, ps),
+                                max(0, int(round(ms * msize))))
+                   for op, ms, ps in self.terms)
+
+    def sample_duration(self, net: SimNet, p: int, msize: int,
+                        warm: bool = True) -> float:
+        return float(sum(
+            op.sample_duration(net, self._term_p(p, ps),
+                               max(0, int(round(ms * msize))), warm)
+            for op, ms, ps in self.terms))
+
+    def sample_durations(self, net: SimNet, p: int, msize: int, nrep: int,
+                         warm: bool = True) -> np.ndarray:
+        if nrep <= 0:
+            return np.empty(0)
+        total = np.zeros(nrep)
+        for op, ms, ps in self.terms:
+            total += op.sample_durations(net, self._term_p(p, ps),
+                                         max(0, int(round(ms * msize))),
+                                         nrep, warm)
+        return total
+
+
+def make_composite_op(expr: str, per_op_kw: dict | None = None,
+                      **overrides) -> SimCollective:
+    """Build the simulated op for an op *expression* (see
+    :mod:`repro.core.opexpr`).
+
+    A plain name returns :func:`make_op` unchanged; anything composite (a
+    ``+`` sequence, a ``*scale`` or ``@half`` modifier) returns a
+    :class:`SimCompositeOp`. ``overrides`` apply to every constituent;
+    ``per_op_kw`` maps constituent names to extra overrides (how a single
+    deliberately mis-tuned collective is modeled). ``#impl`` tags are not
+    meaningful in the simulator and are rejected.
+    """
+    from .opexpr import is_composite, parse_opexpr
+
+    per_op_kw = per_op_kw or {}
+
+    def _mk(name: str) -> SimCollective:
+        kw = dict(overrides)
+        kw.update(per_op_kw.get(name, {}))
+        return make_op(name, **kw)
+
+    terms = parse_opexpr(expr)
+    for t in terms:
+        if t.impl is not None:
+            raise ValueError(
+                f"opexpr {expr!r}: '#{t.impl}' implementation tags are not "
+                "supported by the simulator backend")
+    if not is_composite(expr):
+        return _mk(terms[0].op)
+    return SimCompositeOp(
+        name=expr,
+        terms=tuple((_mk(t.op), t.msize_scale,
+                     0.5 if t.procs == "half" else 1.0) for t in terms),
+    )
 
 
 def make_op(name: str, **overrides) -> SimCollective:

@@ -19,7 +19,7 @@ time: every algorithm only reads local clocks via :meth:`SimNet.local_time`.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

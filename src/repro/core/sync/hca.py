@@ -27,7 +27,6 @@ from __future__ import annotations
 
 import math
 
-import numpy as np
 
 from ..clocks import LinearModel, linear_fit
 from ..simnet import SimNet

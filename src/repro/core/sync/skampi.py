@@ -8,7 +8,6 @@ synchronization (Fig. 8) but drifts because no slope is learned (Fig. 9).
 
 from __future__ import annotations
 
-import numpy as np
 
 from ..clocks import LinearModel
 from ..simnet import SimNet

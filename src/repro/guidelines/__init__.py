@@ -1,0 +1,37 @@
+"""repro.guidelines — PGMPI-style performance-guideline verification.
+
+Declares performance guidelines (``lhs ⪯ rhs`` over collective/mock-up
+expressions) as first-class objects and verifies them against any
+:class:`~repro.campaign.MeasurementBackend` through the campaign layer:
+resumable stores, adaptive ``nrep``, Wilcoxon verdicts with Holm
+family-wise correction. This turns the repo from "measures collectives"
+into "audits implementations". ::
+
+    from repro.campaign import SimBackend, ResultStore
+    from repro.guidelines import SIM_GUIDELINES, verify_guidelines, format_report
+
+    report = verify_guidelines(SIM_GUIDELINES, SimBackend(p=8),
+                               store=ResultStore("g.jsonl"))
+    print(format_report(report))
+    assert report.ok, "guideline violations found"
+"""
+
+from .engine import (DEFAULT_MSIZES, GuidelineReport, GuidelineVerdict,
+                     compile_cases, verify_guidelines)
+from .report import format_report, format_violations
+from .rules import (KERNEL_GUIDELINES, SIM_GUIDELINES, Guideline,
+                    default_guidelines)
+
+__all__ = [
+    "Guideline",
+    "SIM_GUIDELINES",
+    "KERNEL_GUIDELINES",
+    "default_guidelines",
+    "GuidelineVerdict",
+    "GuidelineReport",
+    "compile_cases",
+    "verify_guidelines",
+    "DEFAULT_MSIZES",
+    "format_report",
+    "format_violations",
+]

@@ -8,7 +8,6 @@ never touches JAX device state — required because only ``dryrun.py`` may set
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 __all__ = ["make_production_mesh", "make_local_mesh", "TPUV5E"]
 

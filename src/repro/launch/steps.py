@@ -9,11 +9,9 @@ for parameters/optimizer/cache pytrees via ``jax.eval_shape``.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.shapes import ShapeSpec
 from repro.models import (

@@ -91,7 +91,7 @@ def attention_op(
     """
     if impl == "auto":
         try:  # prefer the Pallas kernel on TPU backends
-            import jax.extend as jex
+            import jax.extend  # noqa: F401 -- probe kernel-capable jax
 
             if jax.default_backend() == "tpu":
                 from repro.kernels import ops as kops

@@ -7,7 +7,7 @@ leading stacked-layer axis so the layer stack runs under ``jax.lax.scan``
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,7 @@ Combines the substrates into the production driver:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import numpy as np

@@ -9,6 +9,8 @@ in the module still runs.
 
 HAVE_HYPOTHESIS = True
 
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # pragma: no cover - exercised only without hypothesis

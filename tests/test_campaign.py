@@ -217,13 +217,14 @@ def test_store_redeclares_changed_spec(tmp_path):
     assert len(specs) == 2 and len(specs[-1]["spec"]["cases"]) == 2
 
 
-def test_store_skips_truncated_tail_line(tmp_path):
+def test_store_warns_and_skips_truncated_tail_line(tmp_path):
     spec = _spec([TestCase("allreduce", 256)], n_launch_epochs=2)
     path = tmp_path / "a.jsonl"
     res = Campaign(spec, _sim(seed0=43), ResultStore(path)).run()
     with open(path, "a") as f:
         f.write('{"kind": "record", "fingerprint": "xyz", "op": "allre')
-    assert len(ResultStore(path).records(res.fingerprint)) == 2
+    with pytest.warns(RuntimeWarning, match="undecodable JSONL line"):
+        assert len(ResultStore(path).records(res.fingerprint)) == 2
 
 
 # ---------------------------------------------------------------------------

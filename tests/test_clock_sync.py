@@ -7,7 +7,6 @@ import pytest
 from repro.core import (
     ClockParams,
     LinearModel,
-    NetParams,
     SimNet,
     linear_fit,
     make_sync,

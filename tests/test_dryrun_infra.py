@@ -9,11 +9,9 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import analyze_hlo
-from repro.models import ModelConfig
 
 
 def test_analyzer_scales_while_loops():

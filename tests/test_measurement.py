@@ -18,7 +18,6 @@ from repro.core import (
     run_barrier_timed,
     run_design,
     run_windowed,
-    wilcoxon_rank_sum,
 )
 
 SYNC_KW = dict(n_fitpts=200, n_exchanges=40)

@@ -14,7 +14,6 @@ from repro.models import (
     forward,
     init_cache,
     init_params,
-    loss_fn,
     num_params,
 )
 from repro.launch.steps import make_train_step

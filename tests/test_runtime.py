@@ -1,12 +1,10 @@
 """Fault tolerance, checkpoint/restart, straggler detection, data pipeline,
 gradient compression."""
 
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.store import CheckpointConfig, CheckpointStore
 from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM

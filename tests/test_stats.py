@@ -3,13 +3,11 @@
 import math
 
 import numpy as np
-import pytest
 
 from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     autocorr_significant_lags,
-    autocorrelation,
     jarque_bera,
     mean_confidence_interval,
     normal_ppf,

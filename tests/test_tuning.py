@@ -2,7 +2,6 @@
 the tuned lowering computes the same loss as the paper-faithful baseline."""
 
 import jax
-import numpy as np
 import pytest
 
 from repro.configs import get_smoke
