@@ -27,6 +27,14 @@ Options:
                   re-rolls it. Exits non-zero when a guideline is VIOLATED
                   (family-wise Holm-corrected alpha = 0.05), so it can gate
                   CI directly.
+  --sweep         run a factor sweep on the sim backend and print the
+                  factor-impact report (Kruskal-Wallis + Holm main effects,
+                  Cliff's-delta ranking, interaction screen). ``--axes``
+                  picks the swept axes, ``--store`` makes the sweep
+                  resumable at cell granularity, ``--workers`` shards grid
+                  cells over a process pool, ``--seed`` re-rolls it.
+  --axes NAMES    comma-separated subset of the stock factor axes for
+                  ``--sweep`` (default: tuning,sync_method,window_us,dtype)
 """
 
 from __future__ import annotations
@@ -112,6 +120,37 @@ def _run_guidelines(ap, args) -> None:
         raise SystemExit(1)
 
 
+def _run_sweep(ap, args) -> None:
+    """Factor-sweep mode: enumerate a factor grid, run every cell as its
+    own campaign (resumable through the store), and print the paper-style
+    "which factors matter" table."""
+    from repro.campaign import ResultStore, SweepScheduler
+    from repro.sweeps import (cells_from_result, default_sim_sweep,
+                              format_factor_report, interaction_screen,
+                              main_effects)
+
+    axes = None
+    if args.axes:
+        axes = [a.strip() for a in args.axes.split(",") if a.strip()]
+    try:
+        spec, backend = default_sim_sweep(seed=args.seed, axes=axes)
+    except ValueError as e:
+        ap.error(f"--axes: {e}")
+    store = ResultStore(args.store) if args.store else None
+    res = SweepScheduler(spec, backend, store,
+                         n_workers=args.workers or 1).run()
+    cells = cells_from_result(res)
+    effects = main_effects(cells)
+    axis_names = ", ".join(ax.name for ax in spec.grid.axes)
+    print(format_factor_report(effects, interaction_screen(cells),
+                               title=f"factor impact [{axis_names}]"))
+    if store is not None:
+        print(f"# store: {args.store} (resumable; "
+              f"{res.n_cells_resumed} cells resumed, "
+              f"{res.n_cells_measured} cells measured this run)",
+              file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
         description="MPI-benchmarking-revisited reproduction suite")
@@ -133,9 +172,17 @@ def main() -> None:
     ap.add_argument("--guidelines", action="store_true",
                     help="verify performance guidelines (PGMPI) and exit; "
                          "--only picks the backend (sim|kernel)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run a factor sweep (sim backend) and print the "
+                         "factor-impact report; --axes/--store/--workers "
+                         "apply")
+    ap.add_argument("--axes", default=None, metavar="NAMES",
+                    help="comma-separated factor axes for --sweep")
     args = ap.parse_args()
     if args.seed < 0:
         ap.error("--seed must be >= 0 (it offsets non-negative RNG seeds)")
+    if args.axes and not args.sweep:
+        ap.error("--axes only makes sense with --sweep")
 
     if args.compare:
         _compare_stores(ap, *args.compare)
@@ -143,6 +190,10 @@ def main() -> None:
 
     if args.guidelines:
         _run_guidelines(ap, args)
+        return
+
+    if args.sweep:
+        _run_sweep(ap, args)
         return
 
     from benchmarks import suite

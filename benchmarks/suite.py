@@ -419,6 +419,30 @@ def bench_micro_run_windowed():
     return rows
 
 
+def bench_micro_sweeps():
+    """Scheduler microbenchmark (not a paper figure): wall-clock of a
+    4-cell factor sweep (grid compile + per-cell campaigns + factor-impact
+    analysis), so the CI perf gate covers the sweep subsystem. The
+    ``derived`` column carries the top-ranked factor as a correctness
+    canary: it must be the injected ``tuning`` axis."""
+    from repro.campaign import SweepScheduler
+    from repro.sweeps import (cells_from_result, default_sim_sweep,
+                              main_effects)
+
+    spec, backend = default_sim_sweep(seed=_seed(7), axes=("tuning", "dtype"),
+                                      n_launch_epochs=4, nrep=30)
+    t0 = time.perf_counter()
+    res = SweepScheduler(spec, backend).run()
+    effects = main_effects(cells_from_result(res))
+    wall = time.perf_counter() - t0
+    top = effects[0]
+    return [(
+        "micro/sweep_4cells",
+        wall / len(res.cells) * 1e6,
+        f"wall={wall:.3f}s top={top.axis}(|d|={top.effect_size:.2f})",
+    )]
+
+
 # ------------------------------------------------------------------- real
 def bench_real_step_functions():
     """The deployment path: real jitted JAX executables timed with the full
@@ -488,5 +512,6 @@ ALL_BENCHES = [
     bench_fig27_30_comparison,
     bench_fig31_reproducibility,
     bench_micro_run_windowed,
+    bench_micro_sweeps,
     bench_real_step_functions,
 ]

@@ -1,0 +1,65 @@
+"""Factor-impact walkthrough: finding the factor that matters.
+
+The paper's headline contribution is showing *which experimental factors
+have an impact on run-time*. This script makes that executable: a factor
+grid over a simulated library with one deliberately mis-tuned collective
+(the ``tuning`` axis) plus real measurement-mechanical factors and a
+known null factor (``dtype`` — a pure label in the simulator). The
+nonparametric main-effect analysis must rank the injected defect first,
+Holm-significant, and leave the dtype label at the bottom — the positive
+and negative control of the whole pipeline.
+
+    PYTHONPATH=src python examples/factor_impact.py
+"""
+
+import os
+import tempfile
+
+from repro.campaign import ResultStore, SweepScheduler
+from repro.sweeps import (cells_from_result, cells_from_store,
+                          default_sim_sweep, format_factor_report,
+                          interaction_screen, main_effects)
+
+# --- 1. the factor grid ----------------------------------------------------
+# Each axis is one Table-4 factor made enumerable: a name, its levels, and
+# the backend/design constructor field the levels are applied to. The
+# default sweep crosses the injected `tuning` defect with a sync-algorithm
+# choice, the window size, and the dtype label — 16 cells.
+spec, backend = default_sim_sweep(seed=0, n_launch_epochs=10)
+for ax in spec.grid.axes:
+    print(f"  {ax.name:<14} ({ax.target}.{ax.kwarg()}): "
+          f"{' | '.join(ax.label(i) for i in range(len(ax.levels)))}")
+print(f"  -> {spec.grid.n_full()} cells x {len(spec.cases)} cases x "
+      f"{spec.design.n_launch_epochs} launch epochs")
+
+# --- 2. run the sweep through a persistent store ---------------------------
+# Every cell is an ordinary campaign keyed by its own factor fingerprint;
+# the sweep manifest + per-cell completion markers make a killed sweep
+# resume at cell granularity.
+store_path = os.path.join(tempfile.mkdtemp(), "sweep.jsonl")
+result = SweepScheduler(spec, backend, ResultStore(store_path)).run()
+print(f"\nmeasured {result.n_cells_measured} cells "
+      f"(sweep id {result.sweep_id})")
+
+# --- 3. the "factors that matter" table ------------------------------------
+cells = cells_from_result(result)
+effects = main_effects(cells)
+print()
+print(format_factor_report(effects, interaction_screen(cells)))
+
+top = effects[0]
+assert top.axis == "tuning" and top.significant, \
+    "the injected defect must be the top-ranked, Holm-significant factor"
+assert not [e for e in effects if e.axis == "dtype"][0].significant, \
+    "the dtype label must stay a null factor"
+print("\ncontrols hold: injected factor ranked first, dtype null")
+
+# --- 4. resume: a second run measures nothing ------------------------------
+again = SweepScheduler(spec, backend, ResultStore(store_path)).run()
+print(f"resume: {again.n_cells_resumed} cells resumed, "
+      f"{again.n_cells_measured} measured")
+
+# the persisted sweep reloads without the in-memory result object
+effects2 = main_effects(cells_from_store(ResultStore(store_path)))
+print(f"store round-trip: top factor {effects2[0].axis!r} "
+      f"(|delta|={effects2[0].effect_size:.3f})")

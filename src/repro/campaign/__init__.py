@@ -20,7 +20,8 @@ live* (:class:`ResultStore`). ::
 from .backends import (JaxBackend, KernelBackend, MeasurementBackend,
                        SimBackend, ensure_host_devices)
 from .core import Campaign, CampaignResult, CampaignSpec
-from .store import ResultStore
+from .store import ResultStore, StoreSnapshot
+from .sweep import CellResult, SweepResult, SweepScheduler, SweepSpec
 
 __all__ = [
     "MeasurementBackend",
@@ -32,4 +33,9 @@ __all__ = [
     "CampaignResult",
     "CampaignSpec",
     "ResultStore",
+    "StoreSnapshot",
+    "SweepSpec",
+    "SweepScheduler",
+    "SweepResult",
+    "CellResult",
 ]

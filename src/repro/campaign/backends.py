@@ -48,6 +48,24 @@ __all__ = [
 _SYNC_KW = dict(n_fitpts=200, n_exchanges=40)
 
 
+def _filter_sync_kw(sync_name: str, kw: dict) -> dict:
+    """``sync_kw`` restricted to what the chosen algorithm's constructor
+    accepts. Fitpoint knobs mean nothing to skampi/netgauge, and a sweep's
+    ``sync_method`` axis must be able to swap algorithms under one backend
+    configuration without the unused knobs turning into TypeErrors."""
+    import inspect
+
+    from repro.core.sync import SYNC_CLASSES
+
+    cls = SYNC_CLASSES.get(sync_name)
+    if cls is None:          # unknown name: let make_sync raise its error
+        return dict(kw)
+    params = inspect.signature(cls.__init__).parameters
+    if any(p.kind == p.VAR_KEYWORD for p in params.values()):
+        return dict(kw)
+    return {k: v for k, v in kw.items() if k in params}
+
+
 def _sequence_calls(fns):
     """One timed callable running ``fns`` back to back — the composite
     mock-up region. The epoch meter blocks on the *returned* value only,
@@ -104,6 +122,22 @@ def _design_factor_kw(design: ExperimentDesign) -> dict:
 # Simulator backend
 # ---------------------------------------------------------------------------
 
+def _apply_cold_buffers(op) -> None:
+    """§5.8's cache factor for the simulator: cold buffers forfeit the
+    cost model's own ``warm_cache_discount``, scaling every affine cost
+    term by ``1 + discount`` (exactly what ``sample_duration(warm=False)``
+    would do, applied once at op-construction time so both window engines
+    and composites inherit it)."""
+    if hasattr(op, "terms"):                 # SimCompositeOp
+        for sub, _, _ in op.terms:
+            _apply_cold_buffers(sub)
+        return
+    f = 1.0 + op.warm_cache_discount
+    op.alpha *= f
+    op.beta *= f
+    op.gamma *= f
+
+
 class _SimEpoch:
     """One simulated launch epoch: a fresh cluster, synchronized clocks,
     and a lazily-built cost model per op name."""
@@ -111,16 +145,20 @@ class _SimEpoch:
     def __init__(self, backend: "SimBackend", epoch: int):
         self.backend = backend
         self.net = SimNet(backend.p, seed=backend.seed0 + 1000 * epoch)
+        sync_kw = _filter_sync_kw(backend.sync_name, backend.sync_kw)
         self.sync = make_sync(backend.sync_name,
-                              **backend.sync_kw).synchronize(self.net)
+                              **sync_kw).synchronize(self.net)
         self._ops: dict[str, Any] = {}
 
     def op(self, name: str):
         if name not in self._ops:
             # `name` may be a composite op expression (a guideline mock-up
             # such as "scatter+allgather" or "allreduce@half+allreduce@half")
-            self._ops[name] = make_composite_op(
+            op = make_composite_op(
                 name, per_op_kw=self.backend.per_op_kw, **self.backend.op_kw)
+            if self.backend.buffer_policy == "cold":
+                _apply_cold_buffers(op)
+            self._ops[name] = op
         return self._ops[name]
 
 
@@ -138,6 +176,15 @@ class SimBackend:
     mis-tuned collective — the thing guideline verification exists to catch
     — is seeded). Window discards (START_LATE / TOOK_TOO_LONG) are topped
     up so the returned sample has ~``nrep`` valid observations.
+
+    Three Table-4 factors are sweepable knobs here so a
+    :class:`~repro.core.factors.FactorGrid` can vary them:
+    ``buffer_policy`` (``"cold"`` forfeits the cost model's warm-cache
+    discount, §5.8), ``epoch_isolation`` (``"none"`` *reuses* one
+    simulated cluster across every launch epoch — the §5.2 anti-pattern a
+    sweep should expose as biased), and ``dtype`` (a pure label in the
+    simulator: it must rank as a null factor, which is the negative
+    control of the factor-impact analysis).
     """
 
     p: int = 8
@@ -148,9 +195,27 @@ class SimBackend:
     sync_kw: dict = field(default_factory=lambda: dict(_SYNC_KW))
     win_size: float = 400e-6
     engine: str = "auto"
+    buffer_policy: str = "warm"        # warm | cold
+    epoch_isolation: str = "process"   # process | none
+    dtype: str = "float32"             # label-only (null factor by design)
     name: str = "sim"
+    _shared_epoch: Any = field(default=None, init=False, repr=False,
+                               compare=False)
 
     def make_epoch(self, epoch: int) -> _SimEpoch:
+        if self.buffer_policy not in ("warm", "cold"):
+            raise ValueError(f"SimBackend: buffer_policy must be 'warm' or "
+                             f"'cold', got {self.buffer_policy!r}")
+        if self.epoch_isolation == "none":
+            # the launch-epoch anti-pattern: every "epoch" shares one
+            # cluster, so AR(1) state, epoch bias and clock drift carry
+            # over (meaningful serially; workers each rebuild their own)
+            if self._shared_epoch is None:
+                self._shared_epoch = _SimEpoch(self, 0)
+            return self._shared_epoch
+        if self.epoch_isolation != "process":
+            raise ValueError(f"SimBackend: epoch_isolation must be 'process' "
+                             f"or 'none', got {self.epoch_isolation!r}")
         return _SimEpoch(self, epoch)
 
     def measure(self, ctx: _SimEpoch, case: TestCase, nrep: int) -> np.ndarray:
@@ -178,7 +243,9 @@ class SimBackend:
             measurement_backend=self.name,
             sync_method=self.sync_name,
             window_size_us=self.win_size * 1e6,
-            epoch_isolation="process",
+            epoch_isolation=self.epoch_isolation,
+            buffer_policy=self.buffer_policy,
+            dtype=self.dtype,
             extra=(("p", self.p), ("seed0", self.seed0),
                    ("op_kw", tuple(sorted(self.op_kw.items()))),
                    ("per_op_kw", tuple(sorted(

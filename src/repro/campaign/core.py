@@ -25,6 +25,7 @@ backend's RNG state advances per measurement (the simulator's does).
 
 from __future__ import annotations
 
+import platform
 from dataclasses import dataclass, field
 
 from repro.core.design import (ExperimentDesign, MeasurementRecord,
@@ -33,7 +34,7 @@ from repro.core.design import (ExperimentDesign, MeasurementRecord,
 from repro.core.factors import FactorSet
 
 from .backends import MeasurementBackend
-from .store import ResultStore
+from .store import ResultStore, StoreSnapshot
 
 __all__ = ["CampaignSpec", "CampaignResult", "Campaign"]
 
@@ -77,7 +78,12 @@ class Campaign:
         self.backend = backend
         self.store = store
 
-    def run(self) -> CampaignResult:
+    def run(self, snapshot: StoreSnapshot | None = None) -> CampaignResult:
+        """Execute (or resume) the campaign. ``snapshot`` — a
+        :meth:`~repro.campaign.ResultStore.snapshot` of the attached store
+        — replaces the per-run full-file resume scan; a sweep runs many
+        campaigns against one growing file and passes the one snapshot it
+        took up front."""
         spec, backend, store = self.spec, self.backend, self.store
         design = spec.design
         cases = list(spec.cases) or backend.default_cases()
@@ -86,9 +92,11 @@ class Campaign:
         fingerprint = None
         done: dict[tuple[str, int, int], MeasurementRecord] = {}
         if store is not None:
-            fingerprint = store.append_campaign(factors, spec.meta())
-            done = {(r.case.op, r.case.msize, r.epoch): r
-                    for r in store.records(fingerprint)}
+            fingerprint = store.append_campaign(factors, spec.meta(),
+                                                snapshot=snapshot)
+            stored = (snapshot.records.get(fingerprint, [])
+                      if snapshot is not None else store.records(fingerprint))
+            done = {(r.case.op, r.case.msize, r.epoch): r for r in stored}
 
         records: list[MeasurementRecord] = []
         n_measured = n_resumed = 0
@@ -103,6 +111,10 @@ class Campaign:
                     n_resumed += 1
                     continue
                 times, meta = measure_case(backend.measure, ctx, case, design)
+                # `host` is deliberately NOT part of the fingerprint
+                # (FactorSet excludes it), so a merged multi-host store
+                # needs it stamped on every record to stay auditable.
+                meta.setdefault("host", platform.node())
                 rec = MeasurementRecord(case=case, epoch=epoch, times=times,
                                         meta=meta)
                 if store is not None:

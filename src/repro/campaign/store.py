@@ -23,9 +23,12 @@ consumable by :func:`~repro.core.compare.compare_tables`.
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import platform
 import warnings
+from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Iterable
 
@@ -35,7 +38,41 @@ from repro.core.design import (MeasurementRecord, ResultTable, TestCase,
                                analyze_records)
 from repro.core.factors import FactorSet
 
-__all__ = ["ResultStore"]
+__all__ = ["ResultStore", "StoreSnapshot"]
+
+
+def _record_from(o: dict) -> MeasurementRecord:
+    return MeasurementRecord(
+        case=TestCase(o["op"], int(o["msize"])),
+        epoch=int(o["epoch"]),
+        times=np.asarray(o["times"], np.float64),
+        invalid_fraction=float(o.get("invalid_fraction", 0.0)),
+        meta=o.get("meta", {}),
+    )
+
+
+@dataclass
+class StoreSnapshot:
+    """A one-pass index of a store file, for write paths that would
+    otherwise re-scan the whole JSONL per operation.
+
+    A sweep touching N cells consults the store ~3 times per cell
+    (campaign dedup, resume lookup, completion markers); against a
+    growing file that is O(N^2) parsing. ``ResultStore.snapshot()`` reads
+    the file once; the snapshot-aware append methods keep it coherent for
+    everything *this* process appends. Single-writer only — a snapshot
+    does not see lines appended by anyone else after it was taken.
+    """
+
+    campaign_specs: dict = field(default_factory=dict)   # fp -> last spec
+    records: dict = field(default_factory=dict)          # fp -> [records]
+    sweeps: list = field(default_factory=list)           # ids, file order
+    manifests: dict = field(default_factory=dict)        # id -> manifest
+    sweep_cells_by_id: dict = field(default_factory=dict)  # id -> {cell: fp}
+
+    def completed(self, fingerprint: str) -> set:
+        return {(r.case.op, r.case.msize, r.epoch)
+                for r in self.records.get(fingerprint, [])}
 
 
 class ResultStore:
@@ -52,7 +89,8 @@ class ResultStore:
             f.write(json.dumps(obj, sort_keys=True) + "\n")
             f.flush()
 
-    def append_campaign(self, factors: FactorSet, spec: dict | None = None) -> str:
+    def append_campaign(self, factors: FactorSet, spec: dict | None = None,
+                        snapshot: StoreSnapshot | None = None) -> str:
         """Declare a campaign; returns its fingerprint.
 
         Campaign identity is the *factor* fingerprint, deliberately not the
@@ -63,26 +101,119 @@ class ResultStore:
         re-declared — which is what makes re-running a *resume* — but a
         changed spec appends a fresh declaration so the file's last
         declaration always describes the data actually in it.
+
+        With a ``snapshot``, the already-declared check consults it
+        instead of re-scanning the file (and updates it on append).
         """
         fp = factors.fingerprint()
         spec = spec or {}
-        last_spec = None
-        for obj in self._lines():
-            if obj.get("kind") == "campaign" and obj["fingerprint"] == fp:
-                last_spec = obj.get("spec", {})
+        if snapshot is not None:
+            last_spec = snapshot.campaign_specs.get(fp)
+        else:
+            last_spec = None
+            for obj in self._lines():
+                if obj.get("kind") == "campaign" and obj["fingerprint"] == fp:
+                    last_spec = obj.get("spec", {})
         if last_spec != spec:
             self._append(dict(kind="campaign", fingerprint=fp,
                               factors=factors.to_dict(), spec=spec))
+            if snapshot is not None:
+                snapshot.campaign_specs[fp] = spec
         return fp
 
     def append_record(self, fingerprint: str, rec: MeasurementRecord) -> None:
+        meta = _jsonable(rec.meta)
+        # host is excluded from the fingerprint by design; without it in the
+        # record meta a merged multi-host store cannot attribute its cells
+        meta.setdefault("host", platform.node())
         self._append(dict(
             kind="record", fingerprint=fingerprint,
             op=rec.case.op, msize=int(rec.case.msize), epoch=int(rec.epoch),
             times=[float(t) for t in np.asarray(rec.times, np.float64)],
             invalid_fraction=float(rec.invalid_fraction),
-            meta=_jsonable(rec.meta),
+            meta=meta,
         ))
+
+    # -- sweep manifests ---------------------------------------------------
+
+    def append_sweep(self, manifest: dict,
+                     snapshot: StoreSnapshot | None = None) -> str:
+        """Declare a factor sweep; returns its deterministic sweep id.
+
+        The manifest (grid axes, per-cell levels and fingerprints, spec
+        meta) is the map that lets one JSONL file hold a whole sweep: the
+        campaign/record lines carry the measurements, the sweep line says
+        which fingerprints form the grid, and :meth:`append_sweep_cell`
+        markers make resume *cell*-granular. The id is a hash of the
+        manifest content, so re-declaring the same sweep is a no-op and a
+        re-run finds its own markers.
+        """
+        blob = json.dumps(manifest, sort_keys=True, default=str)
+        sweep_id = hashlib.sha256(blob.encode()).hexdigest()[:16]
+        if snapshot is not None:
+            if sweep_id in snapshot.sweeps:
+                return sweep_id
+        else:
+            for obj in self._lines():
+                if obj.get("kind") == "sweep" and obj["sweep"] == sweep_id:
+                    return sweep_id
+        self._append(dict(kind="sweep", sweep=sweep_id, manifest=manifest))
+        if snapshot is not None:
+            snapshot.sweeps.append(sweep_id)
+        return sweep_id
+
+    def append_sweep_cell(self, sweep_id: str, index: int,
+                          fingerprint: str) -> None:
+        """Mark one grid cell as completely measured (its campaign records
+        are already in the file). Written *after* the cell's last record,
+        so a killed sweep never marks a half-measured cell."""
+        self._append(dict(kind="sweep-cell", sweep=sweep_id,
+                          cell=int(index), fingerprint=fingerprint))
+
+    def sweeps(self) -> list[str]:
+        """Sweep ids in declaration order."""
+        out: list[str] = []
+        for obj in self._lines():
+            if obj.get("kind") == "sweep" and obj["sweep"] not in out:
+                out.append(obj["sweep"])
+        return out
+
+    def sweep_manifest(self, sweep_id: str | None = None) -> dict:
+        """The declared manifest of a sweep (default: the last one)."""
+        out: dict | None = None
+        for obj in self._lines():
+            if obj.get("kind") != "sweep":
+                continue
+            if sweep_id is None or obj["sweep"] == sweep_id:
+                out = obj["manifest"]
+        if out is None:
+            raise KeyError(f"no sweep {sweep_id!r} in {self.path}")
+        return out
+
+    def sweep_cells(self, sweep_id: str) -> dict[int, str]:
+        """``cell index -> fingerprint`` of every *completed* cell."""
+        return {int(o["cell"]): o["fingerprint"]
+                for o in self._lines()
+                if o.get("kind") == "sweep-cell" and o["sweep"] == sweep_id}
+
+    def snapshot(self) -> StoreSnapshot:
+        """Index the whole file in one pass (see :class:`StoreSnapshot`)."""
+        snap = StoreSnapshot()
+        for o in self._lines():
+            kind = o.get("kind")
+            if kind == "campaign":
+                snap.campaign_specs[o["fingerprint"]] = o.get("spec", {})
+            elif kind == "record":
+                snap.records.setdefault(o["fingerprint"],
+                                        []).append(_record_from(o))
+            elif kind == "sweep":
+                if o["sweep"] not in snap.sweeps:
+                    snap.sweeps.append(o["sweep"])
+                snap.manifests[o["sweep"]] = o.get("manifest", {})
+            elif kind == "sweep-cell":
+                snap.sweep_cells_by_id.setdefault(
+                    o["sweep"], {})[int(o["cell"])] = o["fingerprint"]
+        return snap
 
     # -- reading ----------------------------------------------------------
 
@@ -145,18 +276,9 @@ class ResultStore:
             if not fps:
                 return []
             fingerprint = fps[-1]
-        out: list[MeasurementRecord] = []
-        for o in self._lines():
-            if o.get("kind") != "record" or o["fingerprint"] != fingerprint:
-                continue
-            out.append(MeasurementRecord(
-                case=TestCase(o["op"], int(o["msize"])),
-                epoch=int(o["epoch"]),
-                times=np.asarray(o["times"], np.float64),
-                invalid_fraction=float(o.get("invalid_fraction", 0.0)),
-                meta=o.get("meta", {}),
-            ))
-        return out
+        return [_record_from(o) for o in self._lines()
+                if o.get("kind") == "record"
+                and o["fingerprint"] == fingerprint]
 
     def to_table(self, fingerprint: str | None = None,
                  outlier_filter: bool = True) -> ResultTable:

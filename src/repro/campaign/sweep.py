@@ -1,0 +1,269 @@
+"""Sharded, resumable factor-sweep campaigns.
+
+The paper's headline result is *which experimental factors matter*; to
+answer that for a new system the factor space has to be executable, not
+just recorded. A :class:`SweepSpec` pairs a
+:class:`~repro.core.factors.FactorGrid` (enumerable factor axes) with a
+case list and a base :class:`~repro.core.design.ExperimentDesign`; the
+:class:`SweepScheduler` compiles every grid cell into an ordinary
+:class:`~repro.campaign.Campaign` (cell levels applied by dataclass
+replacement, so each cell's :class:`~repro.core.factors.FactorSet` comes
+from the backend's own ``factors()`` plumbing) and runs them all —
+serially, or sharded over a process pool through the same
+:func:`~repro.core.design.map_parallel` machinery that fans out launch
+epochs.
+
+Persistence lives in one JSONL :class:`~repro.campaign.ResultStore` for
+the whole sweep: a ``sweep`` manifest line declares the grid (axes, per-
+cell levels and fingerprints), the cells' campaign/record lines carry the
+measurements, and a ``sweep-cell`` marker is appended only after a cell's
+last record — so a killed sweep resumes at *cell* granularity (marked
+cells load instead of re-measuring), and in the serial path a cell that
+was itself killed mid-campaign additionally resumes at *record*
+granularity through the normal campaign resume. Sharded workers measure
+whole cells and the parent persists each cell the moment it completes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.design import (ExperimentDesign, ResultTable, TestCase,
+                               analyze_records, map_parallel)
+from repro.core.factors import FactorGrid, FactorSet, GridCell
+
+from .core import Campaign, CampaignResult, CampaignSpec
+from .store import ResultStore
+
+__all__ = ["SweepSpec", "CellResult", "SweepResult", "SweepScheduler"]
+
+
+@dataclass
+class SweepSpec:
+    """What to sweep: the factor grid, the cases measured in every cell,
+    and the base design each cell derives its own design from."""
+
+    grid: FactorGrid
+    cases: list[TestCase]
+    design: ExperimentDesign
+    name: str = "sweep"
+
+    def cell_spec(self, cell: GridCell, design: ExperimentDesign) -> CampaignSpec:
+        return CampaignSpec(cases=list(self.cases), design=design,
+                            name=f"{self.name}/cell{cell.index:03d}")
+
+
+@dataclass
+class CellResult:
+    """One measured (or resumed) grid cell."""
+
+    cell: GridCell
+    factors: FactorSet
+    fingerprint: str
+    table: ResultTable
+    n_measured: int = 0            # record cells executed this run
+    n_resumed: int = 0             # record cells loaded from the store
+
+    def levels(self) -> dict[str, str]:
+        return self.cell.levels()
+
+
+@dataclass
+class SweepResult:
+    cells: list[CellResult]
+    sweep_id: str | None = None
+    n_cells_measured: int = 0      # grid cells with fresh measurements
+    n_cells_resumed: int = 0       # grid cells loaded entirely from store
+    meta: dict = field(default_factory=dict)
+
+
+def _run_cell(backend, cases, design, name) -> CampaignResult:
+    """Measure one grid cell in a worker process. No store attached — the
+    parent persists each finished cell (one writer per JSONL file)."""
+    return Campaign(CampaignSpec(list(cases), design, name=name),
+                    backend).run()
+
+
+class SweepScheduler:
+    """Compile a grid x case list into per-cell campaigns and run them.
+
+    ``n_workers > 1`` shards whole cells over a process pool (each worker
+    runs its cell's launch epochs serially); the parent appends finished
+    cells to the store as they complete, so even a killed sharded sweep
+    keeps every completed cell.
+    """
+
+    def __init__(self, spec: SweepSpec, backend,
+                 store: ResultStore | None = None, n_workers: int = 1):
+        self.spec = spec
+        self.backend = backend
+        self.store = store
+        self.n_workers = max(1, int(n_workers))
+
+    # -- compilation -------------------------------------------------------
+
+    def compile(self) -> list[tuple[GridCell, object, ExperimentDesign,
+                                    FactorSet, str]]:
+        """Materialize every grid cell and verify fingerprint uniqueness.
+
+        A collision means an axis varies something the backend does not
+        surface in its ``factors()`` — running it would silently merge two
+        different experiments under one store key, so it is an error here,
+        before anything is measured.
+        """
+        out = []
+        seen: dict[str, GridCell] = {}
+        for cell in self.spec.grid.cells():
+            backend, design = cell.materialize(self.backend, self.spec.design)
+            factors = backend.factors(design)
+            fp = factors.fingerprint()
+            if fp in seen:
+                raise ValueError(
+                    f"factor grid cells {seen[fp].levels()} and "
+                    f"{cell.levels()} share fingerprint {fp} — an axis "
+                    "level is not reflected in the backend's FactorSet")
+            seen[fp] = cell
+            out.append((cell, backend, design, factors, fp))
+        return out
+
+    # -- execution ---------------------------------------------------------
+
+    def run(self) -> SweepResult:
+        spec, store = self.spec, self.store
+        compiled = self.compile()
+
+        sweep_id = None
+        done: dict[int, str] = {}
+        # one full-file scan for the whole sweep: every per-cell store
+        # consultation below (campaign dedup, resume lookup, completed-set)
+        # goes through this snapshot instead of re-parsing the JSONL
+        snapshot = store.snapshot() if store is not None else None
+        if store is not None:
+            manifest = dict(
+                spec.grid.manifest(), name=spec.name,
+                cases=[[c.op, int(c.msize)] for c in spec.cases],
+                cells=[[cell.index, fp, cell.levels()]
+                       for cell, _, _, _, fp in compiled],
+            )
+            sweep_id = store.append_sweep(manifest, snapshot=snapshot)
+            done = snapshot.sweep_cells_by_id.get(sweep_id, {})
+
+        results: dict[int, CellResult] = {}
+        pending = []
+        for entry in compiled:
+            cell, backend, design, factors, fp = entry
+            if store is not None and self._cell_complete(cell, design, fp,
+                                                         sweep_id, done,
+                                                         snapshot):
+                records = snapshot.records.get(fp, [])
+                results[cell.index] = CellResult(
+                    cell=cell, factors=factors, fingerprint=fp,
+                    table=analyze_records(records, design.outlier_filter),
+                    n_resumed=len(records))
+            else:
+                pending.append(entry)
+
+        measured = self._run_parallel(pending, sweep_id, snapshot) \
+            if self.n_workers > 1 and len(pending) > 1 else None
+        if measured is None:
+            measured = self._run_serial(pending, sweep_id, snapshot)
+        results.update(measured)
+
+        cells = [results[i] for i in sorted(results)]
+        return SweepResult(
+            cells=cells, sweep_id=sweep_id,
+            n_cells_measured=sum(1 for c in cells if c.n_measured),
+            n_cells_resumed=sum(1 for c in cells if not c.n_measured),
+            meta=dict(name=spec.name, n_cells=len(cells),
+                      axes=[ax.name for ax in spec.grid.axes],
+                      n_workers=self.n_workers),
+        )
+
+    def _cell_complete(self, cell, design, fp, sweep_id, done,
+                       snapshot) -> bool:
+        """A cell resumes without running when its ``sweep-cell`` marker is
+        in the store — or when the store already holds its full
+        case x epoch record set under another sweep id (a fractional grid
+        whose ``fraction`` was raised re-declares a new manifest, but the
+        nested cells' measurements are the same experiment and must not be
+        re-measured). In the latter case the marker is added under the new
+        sweep id so the next resume is a plain lookup."""
+        if cell.index in done:
+            return True
+        if not self.spec.cases:       # completeness undecidable without the
+            return False              # explicit case list
+        expected = {(c.op, int(c.msize), e) for c in self.spec.cases
+                    for e in range(design.n_launch_epochs)}
+        if not expected <= snapshot.completed(fp):
+            return False
+        self.store.append_sweep_cell(sweep_id, cell.index, fp)
+        snapshot.sweep_cells_by_id.setdefault(sweep_id, {})[cell.index] = fp
+        return True
+
+    def _run_serial(self, pending, sweep_id, snapshot) -> dict[int, CellResult]:
+        """One cell after another, each through the ordinary (record-
+        granular, store-resuming) campaign path."""
+        out: dict[int, CellResult] = {}
+        for cell, backend, design, factors, fp in pending:
+            # a partially-successful parallel attempt (pool died mid-sweep)
+            # already persisted some of these cells and recorded them in
+            # the snapshot — load, don't re-measure
+            marked = (snapshot.sweep_cells_by_id.get(sweep_id, {})
+                      if snapshot is not None else {})
+            if cell.index in marked:
+                records = snapshot.records.get(fp, [])
+                out[cell.index] = CellResult(
+                    cell=cell, factors=factors, fingerprint=fp,
+                    table=analyze_records(records, design.outlier_filter),
+                    n_resumed=len(records))
+                continue
+            res = Campaign(self.spec.cell_spec(cell, design), backend,
+                           self.store).run(snapshot=snapshot)
+            if self.store is not None:
+                self.store.append_sweep_cell(sweep_id, cell.index, fp)
+            out[cell.index] = CellResult(
+                cell=cell, factors=factors, fingerprint=fp, table=res.table,
+                n_measured=res.n_measured, n_resumed=res.n_resumed)
+        return out
+
+    def _run_parallel(self, pending, sweep_id,
+                      snapshot) -> dict[int, CellResult] | None:
+        """Shard whole cells over a process pool; the parent persists each
+        cell as it completes. ``None`` falls back to the serial path."""
+        spec, store = self.spec, self.store
+
+        def persist(i: int, res: CampaignResult) -> None:
+            if store is None:
+                return
+            cell, _, design, factors, fp = pending[i]
+            # a previous (killed) serial run may have left partial records
+            # for this fingerprint — the worker re-measured the whole cell,
+            # so only append what the store does not already hold
+            have = snapshot.completed(fp)
+            store.append_campaign(factors, spec.cell_spec(cell, design).meta(),
+                                  snapshot=snapshot)
+            for rec in res.records:
+                if (rec.case.op, rec.case.msize, rec.epoch) not in have:
+                    store.append_record(fp, rec)
+                    # keep the snapshot coherent: if the pool dies later,
+                    # the serial fallback must see these cells as done
+                    # rather than re-measure and duplicate their records
+                    snapshot.records.setdefault(fp, []).append(rec)
+            store.append_sweep_cell(sweep_id, cell.index, fp)
+            snapshot.sweep_cells_by_id.setdefault(sweep_id,
+                                                  {})[cell.index] = fp
+
+        rets = map_parallel(
+            _run_cell,
+            [(backend, spec.cases, design,
+              spec.cell_spec(cell, design).name)
+             for cell, backend, design, _, _ in pending],
+            self.n_workers, what="sweep cells", on_result=persist)
+        if rets is None:
+            return None
+        out: dict[int, CellResult] = {}
+        for (cell, _, _, factors, fp), res in zip(pending, rets):
+            out[cell.index] = CellResult(
+                cell=cell, factors=factors, fingerprint=fp, table=res.table,
+                n_measured=res.n_measured, n_resumed=res.n_resumed)
+        return out

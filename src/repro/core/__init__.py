@@ -18,11 +18,19 @@ from .design import (
     TestCase,
     analyze_records,
     case_orders,
+    map_parallel,
     measure_adaptive,
     measure_case,
     run_design,
 )
-from .factors import FactorSet, assert_comparable, capture_factors
+from .factors import (
+    FactorAxis,
+    FactorGrid,
+    FactorSet,
+    GridCell,
+    assert_comparable,
+    capture_factors,
+)
 from .mpi_ops import (
     OP_LIBRARY,
     BatchExecution,
@@ -37,9 +45,12 @@ from .simnet import ClockParams, NetParams, SimNet
 from .stats import (
     autocorr_significant_lags,
     autocorrelation,
+    chi2_sf,
+    cliffs_delta,
     coefficient_of_variation,
     holm_bonferroni,
     jarque_bera,
+    kruskal_wallis,
     mean_confidence_interval,
     normal_ppf,
     relative_ci_width,
@@ -80,16 +91,17 @@ __all__ = [
     "BarrierRun", "probe_barrier_skew",
     # statistics
     "tukey_filter", "wilcoxon_rank_sum", "holm_bonferroni",
-    "significance_stars",
+    "significance_stars", "chi2_sf", "kruskal_wallis", "cliffs_delta",
     "mean_confidence_interval", "jarque_bera", "autocorrelation",
     "autocorr_significant_lags", "coefficient_of_variation", "normal_ppf",
     "t_ppf", "relative_ci_width",
     # design & comparison
     "ExperimentDesign", "TestCase", "run_design", "analyze_records",
     "ResultTable", "EpochSummary", "MeasurementRecord", "case_orders",
-    "measure_case", "measure_adaptive",
+    "measure_case", "measure_adaptive", "map_parallel",
     "compare_tables", "compare_cases", "ComparisonRow", "naive_comparison",
     "format_comparison",
     # factors
     "FactorSet", "capture_factors", "assert_comparable",
+    "FactorAxis", "FactorGrid", "GridCell",
 ]

@@ -29,6 +29,7 @@ the simulation backends do).
 
 from __future__ import annotations
 
+import dataclasses
 import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable
@@ -47,6 +48,7 @@ __all__ = [
     "measure_case",
     "measure_adaptive",
     "run_design",
+    "map_parallel",
     "analyze_records",
 ]
 
@@ -94,6 +96,13 @@ class ExperimentDesign:
     def adaptive(self) -> bool:
         return self.nrep_max is not None
 
+    def replace(self, **overrides) -> "ExperimentDesign":
+        """A copy with the given fields overridden — how a
+        :class:`~repro.core.factors.FactorGrid` cell derives its per-cell
+        design from a campaign's base design instead of every call site
+        hard-wiring its own."""
+        return dataclasses.replace(self, **overrides)
+
 
 @dataclass
 class MeasurementRecord:
@@ -106,7 +115,11 @@ class MeasurementRecord:
 
 @dataclass
 class EpochSummary:
-    """Per-epoch averages after outlier removal (one row of Alg. 6's v)."""
+    """Per-epoch averages after outlier removal (one row of Alg. 6's v).
+
+    ``host`` is where the epoch was *measured* (carried through record
+    meta) — not a factor, but the audit trail a merged multi-host store
+    needs to stay attributable."""
 
     case: TestCase
     epoch: int
@@ -114,6 +127,7 @@ class EpochSummary:
     median: float
     n_kept: int
     n_raw: int
+    host: str = ""
 
 
 @dataclass
@@ -159,7 +173,8 @@ class ResultTable:
     def to_rows(self) -> list[dict]:
         return [
             dict(op=s.case.op, msize=s.case.msize, epoch=s.epoch,
-                 mean=s.mean, median=s.median, n_kept=s.n_kept, n_raw=s.n_raw)
+                 mean=s.mean, median=s.median, n_kept=s.n_kept,
+                 n_raw=s.n_raw, host=s.host)
             for s in self.summaries
         ]
 
@@ -310,40 +325,66 @@ def run_design(
     return records
 
 
-def _run_epochs_parallel(design, epoch_factory, measure, orders, n_workers):
-    """Fan the launch epochs out over processes; ``None`` on any setup
-    failure (unpicklable callables, no fork/spawn support) so the caller
-    can run serially instead."""
+def map_parallel(
+    fn: Callable,
+    argtuples: list[tuple],
+    n_workers: int,
+    what: str = "tasks",
+    on_result: Callable[[int, Any], None] | None = None,
+) -> list | None:
+    """Run ``fn(*args)`` for every argtuple across a ``ProcessPoolExecutor``.
+
+    The shared fan-out machinery of :func:`run_design` (launch epochs) and
+    the sweep scheduler (grid cells): a picklability pre-check and ``None``
+    on any pool-setup failure, so the caller falls back to the serial loop
+    instead of crashing. Results come back in submission order;
+    ``on_result(index, result)`` fires in the *parent* as each task
+    completes (completion order), which is how a sharded sweep persists
+    finished cells while later cells are still running.
+    """
     import concurrent.futures as cf
     import multiprocessing as mp
     import pickle
 
     try:
-        pickle.dumps((epoch_factory, measure))
+        pickle.dumps((fn, argtuples))
     except Exception:
         warnings.warn(
-            "run_design(n_workers>1): epoch_factory/measure not picklable; "
-            "running epochs serially", RuntimeWarning, stacklevel=3)
+            f"map_parallel: {what} not picklable; running serially",
+            RuntimeWarning, stacklevel=3)
         return None
     mp_ctx = None
     if "fork" in mp.get_all_start_methods():
         mp_ctx = mp.get_context("fork")
     try:
         with cf.ProcessPoolExecutor(
-            max_workers=min(n_workers, design.n_launch_epochs),
+            max_workers=min(n_workers, len(argtuples)),
             mp_context=mp_ctx,
         ) as pool:
-            futures = [
-                pool.submit(_measure_epoch, epoch_factory, measure, epoch,
-                            orders[epoch], design)
-                for epoch in range(design.n_launch_epochs)
-            ]
-            return [f.result() for f in futures]
+            futures = {pool.submit(fn, *args): i
+                       for i, args in enumerate(argtuples)}
+            out: list = [None] * len(argtuples)
+            for fut in cf.as_completed(futures):
+                i = futures[fut]
+                out[i] = fut.result()
+                if on_result is not None:
+                    on_result(i, out[i])
+            return out
     except (OSError, cf.process.BrokenProcessPool, pickle.PicklingError) as e:
         warnings.warn(
-            f"run_design(n_workers>1): process pool failed ({e!r}); "
-            "running epochs serially", RuntimeWarning, stacklevel=3)
+            f"map_parallel: process pool failed ({e!r}); running {what} "
+            "serially", RuntimeWarning, stacklevel=3)
         return None
+
+
+def _run_epochs_parallel(design, epoch_factory, measure, orders, n_workers):
+    """Fan the launch epochs out over processes; ``None`` on any setup
+    failure so :func:`run_design` runs serially instead."""
+    return map_parallel(
+        _measure_epoch,
+        [(epoch_factory, measure, epoch, orders[epoch], design)
+         for epoch in range(design.n_launch_epochs)],
+        n_workers, what="epoch_factory/measure")
 
 
 def analyze_records(
@@ -365,6 +406,7 @@ def analyze_records(
                 median=float(np.median(kept)),
                 n_kept=int(kept.size),
                 n_raw=int(raw.size),
+                host=str(rec.meta.get("host", "")),
             )
         )
     return ResultTable(summaries=summaries)

@@ -31,6 +31,9 @@ __all__ = [
     "RankSumResult",
     "wilcoxon_rank_sum",
     "holm_bonferroni",
+    "chi2_sf",
+    "kruskal_wallis",
+    "cliffs_delta",
     "significance_stars",
     "jarque_bera",
     "autocorrelation",
@@ -256,6 +259,93 @@ def holm_bonferroni(pvals) -> np.ndarray:
     adj = np.empty(m)
     adj[order] = adj_sorted
     return adj
+
+
+def chi2_sf(x: float, df: int) -> float:
+    """Chi-square survival function ``P(X > x)`` for integer ``df``.
+
+    Closed forms via the regularized upper incomplete gamma at integer and
+    half-integer shape (no SciPy): for even ``df`` a finite Poisson sum,
+    for odd ``df`` the erfc term plus a finite sum with half-integer
+    gamma weights. Exact (up to float rounding) for every integer df —
+    the null distribution of the Kruskal-Wallis H statistic below.
+    """
+    if df < 1:
+        raise ValueError(f"df must be a positive integer, got {df}")
+    if x <= 0.0:
+        return 1.0
+    h = x / 2.0
+    if df % 2 == 0:
+        # Q(h, m) = exp(-h) * sum_{k<m} h^k / k!,  m = df/2
+        term, total = 1.0, 1.0
+        for k in range(1, df // 2):
+            term *= h / k
+            total += term
+        return float(min(1.0, math.exp(-h) * total))
+    # odd df = 2m+1: Q = erfc(sqrt(h)) + exp(-h) * sum_{k=1..m} h^(k-1/2)/G(k+1/2)
+    m = (df - 1) // 2
+    total = math.erfc(math.sqrt(h))
+    if m > 0:
+        # h^(k-1/2) / Gamma(k+1/2), built iteratively to avoid overflow
+        term = math.sqrt(h) / math.gamma(1.5)          # k = 1
+        acc = term
+        for k in range(2, m + 1):
+            term *= h / (k - 0.5)
+            acc += term
+        total += math.exp(-h) * acc
+    return float(min(1.0, total))
+
+
+def kruskal_wallis(samples) -> tuple[float, float]:
+    """Kruskal-Wallis H test across ``k`` independent samples ->
+    ``(H, p_value)``.
+
+    The k-level generalization of the Wilcoxon rank-sum test — the
+    paper-consistent (nonparametric, §5.1) omnibus test for "does this
+    experimental factor have *any* effect across its levels?". Tie-
+    corrected; the null distribution is chi-square with ``k - 1`` degrees
+    of freedom (adequate for the sweep regime, every group >= ~5).
+    """
+    groups = [np.asarray(s, dtype=np.float64) for s in samples]
+    if len(groups) < 2:
+        raise ValueError("kruskal_wallis needs at least 2 samples")
+    if any(g.size == 0 for g in groups):
+        raise ValueError("kruskal_wallis: empty sample")
+    n = np.array([g.size for g in groups])
+    total = int(n.sum())
+    ranks, tie_term = _rank_with_ties(np.concatenate(groups))
+    h = 0.0
+    pos = 0
+    for size in n:
+        r = float(np.sum(ranks[pos:pos + size]))
+        h += r * r / size
+        pos += size
+    h = 12.0 / (total * (total + 1)) * h - 3.0 * (total + 1)
+    correction = 1.0 - tie_term / (total**3 - total)
+    if correction <= 0.0:      # every observation tied: no information
+        return 0.0, 1.0
+    h /= correction
+    return float(h), chi2_sf(float(h), len(groups) - 1)
+
+
+def cliffs_delta(a: np.ndarray, b: np.ndarray) -> float:
+    """Cliff's delta effect size ``P(a > b) - P(a < b)`` in ``[-1, 1]``.
+
+    The ordinal companion to the rank tests: +1 means every ``a``
+    observation exceeds every ``b`` (sample A strictly slower when the
+    samples are run-times), 0 means complete overlap. Unlike a p-value it
+    does not grow with sample size, so it is the sound *ranking* key for
+    "which factors matter most" (|delta|), with the Wilcoxon/KW p-values
+    gating significance.
+    """
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    if a.size == 0 or b.size == 0:
+        raise ValueError("empty sample")
+    bs = np.sort(b)
+    n_less = np.searchsorted(bs, a, side="left").sum()     # b < a_i pairs
+    n_greater = (b.size - np.searchsorted(bs, a, side="right")).sum()
+    return float((int(n_less) - int(n_greater)) / (a.size * b.size))
 
 
 def significance_stars(p: float) -> str:

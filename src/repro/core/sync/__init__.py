@@ -29,22 +29,37 @@ __all__ = [
     "collect_fitpoints_batch",
     "compute_offset_minrtt",
     "ALGORITHMS",
+    "SYNC_CLASSES",
     "make_sync",
 ]
 
-ALGORITHMS = ("skampi", "netgauge", "jk", "hca", "hca2")
+#: Paper name -> implementation class: the single authority for sync-name
+#: resolution, shared by :func:`make_sync` and by callers that need to
+#: introspect an algorithm's constructor (e.g. the campaign backends
+#: filtering their ``sync_kw`` when a sweep swaps algorithms).
+SYNC_CLASSES: dict[str, type] = {
+    "skampi": SkampiSync,
+    "netgauge": NetgaugeSync,
+    "jk": JKSync,
+    "hca": HCASync,
+    "hca2": HCASync,
+}
+
+ALGORITHMS = tuple(SYNC_CLASSES)
 
 
 def make_sync(name: str, **kw) -> ClockSync:
     """Factory by paper name."""
-    if name == "skampi":
-        return SkampiSync(**kw)
-    if name == "netgauge":
-        return NetgaugeSync(**kw)
-    if name == "jk":
-        return JKSync(**kw)
-    if name == "hca":
-        return HCASync(hierarchical_intercepts=False, **kw)
-    if name == "hca2":
-        return HCASync(hierarchical_intercepts=True, **kw)
-    raise ValueError(f"unknown sync algorithm {name!r}; known: {ALGORITHMS}")
+    cls = SYNC_CLASSES.get(name)
+    if cls is None:
+        raise ValueError(f"unknown sync algorithm {name!r}; "
+                         f"known: {ALGORITHMS}")
+    if cls is HCASync:
+        # implied by the name; accepting an override would let 'hca' run
+        # with hca2 semantics while every factor record still says 'hca'
+        if "hierarchical_intercepts" in kw:
+            raise TypeError(
+                "make_sync: hierarchical_intercepts is implied by the "
+                "algorithm name ('hca'/'hca2'); do not pass it")
+        kw["hierarchical_intercepts"] = name == "hca2"
+    return cls(**kw)

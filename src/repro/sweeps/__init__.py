@@ -1,0 +1,41 @@
+"""repro.sweeps — the factor registry made executable, end to end.
+
+The third consumer of the campaign layer (after the suite and guideline
+verification): enumerable factor axes (:class:`~repro.core.factors.
+FactorAxis` / :class:`~repro.core.factors.FactorGrid`) are compiled by the
+:class:`~repro.campaign.SweepScheduler` into per-cell campaigns — sharded,
+persistent, resumable — and :mod:`repro.sweeps.effects` distills the
+measured grid into the paper's "which factors matter" table
+(Kruskal-Wallis + Holm main effects, Cliff's-delta ranking, pairwise
+interaction screen). ::
+
+    from repro.campaign import ResultStore, SweepScheduler
+    from repro.sweeps import (default_sim_sweep, cells_from_result,
+                              main_effects, format_factor_report)
+
+    spec, backend = default_sim_sweep(seed=0)
+    res = SweepScheduler(spec, backend, ResultStore("sweep.jsonl")).run()
+    print(format_factor_report(main_effects(cells_from_result(res))))
+"""
+
+from .axes import (DEFAULT_SWEEP_AXES, MISTUNED_PER_OP_KW, default_sim_sweep,
+                   sim_axes)
+from .effects import (AxisEffect, CellData, InteractionEffect, PairEffect,
+                      cells_from_result, cells_from_store,
+                      format_factor_report, interaction_screen, main_effects)
+
+__all__ = [
+    "sim_axes",
+    "default_sim_sweep",
+    "DEFAULT_SWEEP_AXES",
+    "MISTUNED_PER_OP_KW",
+    "CellData",
+    "PairEffect",
+    "AxisEffect",
+    "InteractionEffect",
+    "cells_from_result",
+    "cells_from_store",
+    "main_effects",
+    "interaction_screen",
+    "format_factor_report",
+]

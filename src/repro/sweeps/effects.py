@@ -1,0 +1,323 @@
+"""Nonparametric factor-impact analysis of a completed sweep.
+
+The analysis that turns a grid of measured cells back into the paper's
+headline table — *which experimental factors have an impact on run-time*:
+
+  * per-axis **main effects**: Kruskal-Wallis across the axis levels on
+    *aligned* per-case-normalized per-epoch medians (the paper's unit of
+    analysis, §6.2) — aligned meaning each observation is centered on the
+    median of its complementary-factor stratum (the cells that agree on
+    every *other* axis), the aligned-rank device for factorial designs
+    that keeps a huge factor from drowning the contrast of a modest one —
+    with Holm step-down across the axis family so the report's
+    false-"factor matters" rate is bounded by alpha, pairwise one-sided
+    Wilcoxon between levels, and Cliff's-delta effect sizes — the |delta|
+    is the ranking key ("which factor matters *most*"), because unlike a
+    p-value it does not inflate with sample size;
+  * a pairwise **interaction screen**: for each axis pair, how much the
+    conditional Cliff's delta of one axis moves across the levels of the
+    other. A screen, not a test — it ranks candidate interactions for a
+    follow-up sweep, it does not assign them p-values.
+
+Normalization: every per-epoch median is divided by the grand median of
+its own test case across all cells, so observations from different
+message sizes pool on a common dimensionless scale and a factor's effect
+is measured *relative* to typical run-time.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.stats import (cliffs_delta, holm_bonferroni, kruskal_wallis,
+                              significance_stars, wilcoxon_rank_sum)
+
+__all__ = [
+    "CellData",
+    "PairEffect",
+    "AxisEffect",
+    "InteractionEffect",
+    "cells_from_result",
+    "cells_from_store",
+    "main_effects",
+    "interaction_screen",
+    "format_factor_report",
+]
+
+
+@dataclass
+class CellData:
+    """The analysis view of one grid cell: its level labels and the
+    per-epoch medians of every case it measured."""
+
+    index: int
+    levels: dict[str, str]
+    medians: dict[tuple[str, int], np.ndarray]
+
+
+def cells_from_result(result) -> list[CellData]:
+    """Adapt a :class:`~repro.campaign.SweepResult` for analysis."""
+    out = []
+    for c in result.cells:
+        meds = {case.key(): c.table.medians(case) for case in c.table.cases()}
+        out.append(CellData(index=c.cell.index, levels=c.levels(),
+                            medians=meds))
+    return out
+
+
+def cells_from_store(store, sweep_id: str | None = None) -> list[CellData]:
+    """Rebuild the analysis view from a persisted sweep (default: the last
+    sweep declared in the store). Only *completed* cells — those with a
+    ``sweep-cell`` marker — are included, so analyzing a killed sweep
+    never mixes half-measured cells into the effect estimates. The store
+    file is parsed once (one snapshot), not once per cell."""
+    from repro.core.design import analyze_records
+
+    snap = store.snapshot()
+    if sweep_id is None:
+        if not snap.sweeps:
+            raise KeyError(f"no sweep in {store.path}")
+        sweep_id = snap.sweeps[-1]
+    if sweep_id not in snap.manifests:
+        raise KeyError(f"no sweep {sweep_id!r} in {store.path}")
+    manifest = snap.manifests[sweep_id]
+    done = snap.sweep_cells_by_id.get(sweep_id, {})
+    out = []
+    for index, fp, levels in manifest["cells"]:
+        if int(index) not in done:
+            continue
+        table = analyze_records(snap.records.get(fp, []))
+        meds = {case.key(): table.medians(case) for case in table.cases()}
+        out.append(CellData(index=int(index), levels=dict(levels),
+                            medians=meds))
+    return out
+
+
+@dataclass
+class PairEffect:
+    """One level pair of one axis: the one-sided Wilcoxon question
+    "is `slower` really slower than `faster`?" plus the effect size."""
+
+    slower: str
+    faster: str
+    p_wilcoxon: float              # one-sided, direction chosen by medians
+    p_holm: float                  # Holm-adjusted within the axis' pairs
+    delta: float                   # Cliff's delta of slower vs faster
+
+    @property
+    def stars(self) -> str:
+        return significance_stars(self.p_holm)
+
+
+@dataclass
+class AxisEffect:
+    """Main effect of one factor axis."""
+
+    axis: str
+    levels: tuple[str, ...]        # ordered slowest -> fastest
+    level_medians: dict[str, float]   # normalized group medians
+    h_stat: float
+    p_kw: float                    # raw Kruskal-Wallis p
+    p_holm: float = 1.0            # Holm-adjusted across the axis family
+    pairs: list[PairEffect] = field(default_factory=list)
+    effect_size: float = 0.0       # max |Cliff's delta| over level pairs
+    n_obs: int = 0
+    alpha: float = 0.05
+
+    @property
+    def significant(self) -> bool:
+        return self.p_holm <= self.alpha
+
+    @property
+    def verdict(self) -> str:
+        return "MATTERS" if self.significant else "-"
+
+    def ordering(self) -> str:
+        return " > ".join(self.levels)
+
+
+@dataclass
+class InteractionEffect:
+    """One axis pair of the interaction screen: how much axis_a's
+    conditional effect moves across axis_b's levels."""
+
+    axis_a: str
+    axis_b: str
+    score: float                   # spread of conditional Cliff's deltas
+    detail: str = ""
+
+
+def _normalized_pools(cells: list[CellData]) -> list[tuple[CellData, np.ndarray]]:
+    """Each cell's observations pooled across cases on the dimensionless
+    per-case-normalized scale."""
+    if not cells:
+        raise ValueError("no cells to analyze")
+    keys = sorted({k for c in cells for k in c.medians})
+    grand: dict[tuple, float] = {}
+    for k in keys:
+        allv = np.concatenate([c.medians[k] for c in cells if k in c.medians
+                               and c.medians[k].size])
+        if allv.size == 0:
+            continue
+        grand[k] = float(np.median(allv)) or 1.0
+    out = []
+    for c in cells:
+        parts = [c.medians[k] / grand[k] for k in keys
+                 if k in c.medians and k in grand and c.medians[k].size]
+        if not parts:
+            raise ValueError(f"cell {c.index} ({c.levels}) has no "
+                             "observations to analyze")
+        out.append((c, np.concatenate(parts)))
+    return out
+
+
+def _axis_names(cells: list[CellData]) -> list[str]:
+    names = list(cells[0].levels)
+    for c in cells:
+        if list(c.levels) != names:
+            raise ValueError(f"cells disagree on the axis set: {names} vs "
+                             f"{list(c.levels)}")
+    return names
+
+
+def _aligned_level_pools(pools, axis: str) -> dict[str, np.ndarray]:
+    """Per-level pools *aligned on the complementary strata*: every
+    observation is centered on the median of its stratum (the cells that
+    share its levels on all other axes), so variance contributed by the
+    other factors cancels out of this axis' contrast. Observations end up
+    in units of "fraction of typical run-time, relative to the stratum"."""
+    strata: dict[tuple, list[tuple[str, np.ndarray]]] = {}
+    order: list[str] = []
+    for c, x in pools:
+        lab = c.levels[axis]
+        if lab not in order:
+            order.append(lab)
+        key = tuple((k, v) for k, v in c.levels.items() if k != axis)
+        strata.setdefault(key, []).append((lab, x))
+    grouped: dict[str, list[np.ndarray]] = {lab: [] for lab in order}
+    for entries in strata.values():
+        center = float(np.median(np.concatenate([x for _, x in entries])))
+        for lab, x in entries:
+            grouped[lab].append(x - center)
+    return {lab: np.concatenate(v) for lab, v in grouped.items() if v}
+
+
+def main_effects(cells: list[CellData], alpha: float = 0.05) -> list[AxisEffect]:
+    """Per-axis main effects on aligned observations, ranked
+    most-impactful first.
+
+    Ranking key: Holm-significant axes before non-significant ones, then
+    descending |Cliff's delta|. The returned list is exactly the row order
+    of :func:`format_factor_report`.
+    """
+    pools = _normalized_pools(cells)
+    effects: list[AxisEffect] = []
+    for axis in _axis_names(cells):
+        by_level = _aligned_level_pools(pools, axis)
+        labels = list(by_level)
+        if len(labels) < 2:
+            # fractional sampling can starve an axis down to one level;
+            # skipping it silently would misreport the swept space
+            raise ValueError(f"axis {axis!r} has a single level in the "
+                             "analyzed cells — grid fraction too small")
+        h, p_kw = kruskal_wallis([by_level[lab] for lab in labels])
+        medians = {lab: float(np.median(by_level[lab])) for lab in labels}
+        pairs: list[PairEffect] = []
+        for i in range(len(labels)):
+            for j in range(i + 1, len(labels)):
+                a, b = labels[i], labels[j]
+                slower, faster = (a, b) if medians[a] >= medians[b] else (b, a)
+                res = wilcoxon_rank_sum(by_level[slower], by_level[faster],
+                                        alternative="greater")
+                pairs.append(PairEffect(
+                    slower=slower, faster=faster, p_wilcoxon=res.p_value,
+                    p_holm=1.0,
+                    delta=cliffs_delta(by_level[slower], by_level[faster])))
+        for pair, adj in zip(pairs, holm_bonferroni(
+                [p.p_wilcoxon for p in pairs])):
+            pair.p_holm = float(adj)
+        effects.append(AxisEffect(
+            axis=axis,
+            levels=tuple(sorted(labels, key=lambda L: -medians[L])),
+            level_medians=medians, h_stat=h, p_kw=p_kw, pairs=pairs,
+            effect_size=max(abs(p.delta) for p in pairs),
+            n_obs=sum(v.size for v in by_level.values()), alpha=alpha))
+    for eff, adj in zip(effects, holm_bonferroni([e.p_kw for e in effects])):
+        eff.p_holm = float(adj)
+    effects.sort(key=lambda e: (not e.significant, -e.effect_size))
+    return effects
+
+
+def interaction_screen(cells: list[CellData]) -> list[InteractionEffect]:
+    """Rank axis pairs by how non-additive their joint effect looks.
+
+    For each ordered level pair of axis A, Cliff's delta is computed
+    *within* each level of axis B; the pair's score is the largest spread
+    of those conditional deltas (0 = perfectly additive on the ordinal
+    scale). Pairs of levels that never co-occur (fractional grids) are
+    skipped.
+    """
+    pools = _normalized_pools(cells)
+    axes = _axis_names(cells)
+    out: list[InteractionEffect] = []
+    for ai in range(len(axes)):
+        for aj in range(ai + 1, len(axes)):
+            a, b = axes[ai], axes[aj]
+            a_levels = list(dict.fromkeys(c.levels[a] for c, _ in pools))
+            b_levels = list(dict.fromkeys(c.levels[b] for c, _ in pools))
+            score, detail = 0.0, ""
+            for x in range(len(a_levels)):
+                for y in range(x + 1, len(a_levels)):
+                    la, lb = a_levels[x], a_levels[y]
+                    deltas = {}
+                    for cond in b_levels:
+                        pa = [v for c, v in pools
+                              if c.levels[a] == la and c.levels[b] == cond]
+                        pb = [v for c, v in pools
+                              if c.levels[a] == lb and c.levels[b] == cond]
+                        if pa and pb:
+                            deltas[cond] = cliffs_delta(
+                                np.concatenate(pa), np.concatenate(pb))
+                    if len(deltas) < 2:
+                        continue
+                    spread = max(deltas.values()) - min(deltas.values())
+                    if spread > score:
+                        score = spread
+                        detail = (f"delta({la} vs {lb}) spans "
+                                  f"{min(deltas.values()):+.2f}.."
+                                  f"{max(deltas.values()):+.2f} across {b}")
+            out.append(InteractionEffect(axis_a=a, axis_b=b, score=score,
+                                         detail=detail))
+    out.sort(key=lambda e: -e.score)
+    return out
+
+
+def format_factor_report(effects: list[AxisEffect],
+                         interactions: list[InteractionEffect] | None = None,
+                         title: str = "factor impact") -> str:
+    """The paper's "factors that matter" table from sweep data."""
+    lines = [f"# {title} (Kruskal-Wallis + Holm on aligned normalized "
+             "per-epoch medians; ranked by |Cliff's delta|)"]
+    lines.append(
+        f"{'factor':<16} {'levels (slow > fast)':<28} {'H':>8} {'p(KW)':>9} "
+        f"{'p(holm)':>9} {'sig':>4} {'|delta|':>8} {'n':>6} {'verdict':>8}")
+    for e in effects:
+        stars = significance_stars(e.p_holm)
+        lines.append(
+            f"{e.axis:<16} {e.ordering():<28} {e.h_stat:>8.2f} "
+            f"{e.p_kw:>9.2e} {e.p_holm:>9.2e} {stars:>4} "
+            f"{e.effect_size:>8.3f} {e.n_obs:>6} {e.verdict:>8}")
+    n_sig = sum(e.significant for e in effects)
+    lines.append(f"# {n_sig}/{len(effects)} factors matter at family-wise "
+                 f"alpha={effects[0].alpha if effects else 0.05}")
+    if interactions:
+        lines.append("# interaction screen (spread of conditional deltas; "
+                     "ranking only, no p-values)")
+        for it in interactions:
+            if not it.detail:
+                continue
+            lines.append(f"  {it.axis_a} x {it.axis_b:<16} "
+                         f"score={it.score:.2f}  {it.detail}")
+    return "\n".join(lines)

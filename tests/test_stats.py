@@ -8,7 +8,10 @@ from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     autocorr_significant_lags,
+    chi2_sf,
+    cliffs_delta,
     jarque_bera,
+    kruskal_wallis,
     mean_confidence_interval,
     normal_ppf,
     significance_stars,
@@ -152,3 +155,55 @@ def test_normal_ppf_inverse(q):
     # Phi(z) == q
     phi = 0.5 * math.erfc(-z / math.sqrt(2))
     assert abs(phi - q) < 1e-6
+
+
+def test_chi2_sf_known_critical_values():
+    # 5% critical values of chi-square, df = 1..4 (standard tables)
+    for df, crit in ((1, 3.841), (2, 5.991), (3, 7.815), (4, 9.488)):
+        assert abs(chi2_sf(crit, df) - 0.05) < 5e-4, df
+    assert chi2_sf(0.0, 3) == 1.0
+    assert chi2_sf(-1.0, 3) == 1.0
+    assert chi2_sf(1e4, 2) < 1e-300 or chi2_sf(1e4, 2) == 0.0
+
+
+def test_kruskal_wallis_known_value():
+    # scipy.stats.kruskal reference on a fixed example (with ties)
+    a = np.array([1.0, 2.0, 3.0, 4.0])
+    b = np.array([2.0, 4.0, 6.0, 8.0])
+    c = np.array([5.0, 6.0, 7.0, 8.0])
+    h, p = kruskal_wallis([a, b, c])
+    assert abs(h - 5.734042553191489) < 1e-9   # scipy 1.x
+    assert abs(p - 0.0568680687883) < 1e-9
+
+
+def test_kruskal_wallis_detects_shift_and_null():
+    rng = np.random.default_rng(1)
+    base = [rng.lognormal(0, 0.3, 60) for _ in range(3)]
+    _, p_null = kruskal_wallis(base)
+    assert p_null > 0.01
+    shifted = base[:2] + [base[2] * 2.0]
+    _, p_shift = kruskal_wallis(shifted)
+    assert p_shift < 1e-6
+    h, p = kruskal_wallis([np.ones(6), np.ones(7)])   # all tied
+    assert h == 0.0 and p == 1.0
+
+
+def test_cliffs_delta_bounds_and_signs():
+    a = np.array([10.0, 11.0, 12.0])
+    b = np.array([1.0, 2.0, 3.0])
+    assert cliffs_delta(a, b) == 1.0
+    assert cliffs_delta(b, a) == -1.0
+    assert cliffs_delta(a, a) == 0.0
+    # ties count as neither greater nor less: 3 "less" pairs + 1 tie of 4
+    assert cliffs_delta(np.array([1.0, 2.0]), np.array([2.0, 3.0])) == -0.75
+
+
+@given(st.integers(5, 30), st.integers(5, 30), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_cliffs_delta_antisymmetric(n1, n2, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(0, 1, n1)
+    b = rng.normal(0.3, 1, n2)
+    d = cliffs_delta(a, b)
+    assert -1.0 <= d <= 1.0
+    assert abs(d + cliffs_delta(b, a)) < 1e-12

@@ -1,0 +1,412 @@
+"""Factor-sweep subsystem: enumerable axes and grids (fingerprint
+hygiene), the sharded/resumable scheduler, and the nonparametric
+factor-impact analysis with its positive (injected defect) and negative
+(dtype label) controls."""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.campaign import (Campaign, CampaignSpec, ResultStore, SimBackend,
+                            SweepScheduler, SweepSpec)
+from repro.core import (ExperimentDesign, FactorAxis, FactorGrid, TestCase,
+                        assert_comparable, capture_factors, compare_tables)
+from repro.sweeps import (MISTUNED_PER_OP_KW, cells_from_result,
+                          cells_from_store, default_sim_sweep,
+                          format_factor_report, interaction_screen,
+                          main_effects, sim_axes)
+
+FAST_SYNC = dict(n_fitpts=60, n_exchanges=20)
+ALL_AXIS_NAMES = tuple(ax.name for ax in sim_axes())
+
+
+def _small_sweep(seed=0, axes=("tuning", "dtype"), n_launch_epochs=3,
+                 nrep=20, msizes=(512,)):
+    return default_sim_sweep(seed=seed, axes=axes, msizes=msizes,
+                             n_launch_epochs=n_launch_epochs, nrep=nrep)
+
+
+# ---------------------------------------------------------------------------
+# Factor axes & grids
+# ---------------------------------------------------------------------------
+
+def test_axis_validation():
+    with pytest.raises(ValueError, match="at least 2 levels"):
+        FactorAxis("a", (1,))
+    with pytest.raises(ValueError, match="target"):
+        FactorAxis("a", (1, 2), target="nowhere")
+    with pytest.raises(ValueError, match="labels"):
+        FactorAxis("a", (1, 2), labels=("x",))
+    with pytest.raises(ValueError, match="distinct"):
+        FactorAxis("a", ({}, {}), labels=("x", "x"))
+
+
+def test_grid_enumerates_full_cross_product():
+    grid = FactorGrid(sim_axes(("tuning", "sync_method", "dtype")))
+    assert grid.n_full() == 8 and len(grid) == 8
+    cells = grid.cells()
+    assert [c.index for c in cells] == list(range(8))
+    seen = {tuple(sorted(c.levels().items())) for c in cells}
+    assert len(seen) == 8
+
+
+def test_grid_fractional_sampling_is_deterministic_and_nested():
+    axes = sim_axes(("tuning", "sync_method", "window_us", "dtype"))
+    full = FactorGrid(axes)
+    half = FactorGrid(axes, design_seed=3, fraction=0.5)
+    assert half.cell_indices() == FactorGrid(axes, design_seed=3,
+                                             fraction=0.5).cell_indices()
+    assert len(half) == 8 and set(half.cell_indices()) < set(
+        full.cell_indices())
+    assert half.cell_indices() != FactorGrid(axes, design_seed=4,
+                                             fraction=0.5).cell_indices()
+    # samples nest: raising the fraction only *adds* cells, so a persisted
+    # fractional sweep keeps resuming after the fraction is raised
+    quarter = FactorGrid(axes, design_seed=3, fraction=0.25)
+    assert set(quarter.cell_indices()) < set(half.cell_indices())
+
+
+def test_grid_cell_materializes_backend_and_design():
+    grid = FactorGrid(sim_axes(("tuning", "shuffle")))
+    base = SimBackend(p=4, seed0=1, sync_kw=dict(FAST_SYNC))
+    design = ExperimentDesign(n_launch_epochs=2, nrep=5, seed=1)
+    cell = grid.cells()[-1]          # tuning=mistuned, shuffle=False
+    backend, dsn = cell.materialize(base, design)
+    assert backend.per_op_kw == MISTUNED_PER_OP_KW
+    assert dsn.shuffle is False and design.shuffle is True
+    assert base.per_op_kw == {}      # the base objects are untouched
+
+
+def test_grid_cell_bad_key_names_the_axis():
+    grid = FactorGrid((FactorAxis("bogus", (1, 2), key="no_such_field"),
+                       FactorAxis("dtype", ("float32", "float64"))))
+    with pytest.raises(TypeError, match="no_such_field"):
+        grid.cells()[0].materialize(SimBackend(), ExperimentDesign())
+
+
+def test_all_stock_axes_yield_distinct_fingerprints():
+    """The full 2^7 stock grid: every cell must map to its own store key,
+    i.e. every axis level is reflected in the backend's FactorSet."""
+    spec, backend = _small_sweep(axes=ALL_AXIS_NAMES)
+    compiled = SweepScheduler(spec, backend).compile()
+    fps = [fp for *_, fp in compiled]
+    assert len(fps) == 2 ** len(ALL_AXIS_NAMES)
+    assert len(set(fps)) == len(fps)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_grid_cells_distinct_fingerprints_property(seed):
+    """Property: any subset of stock axes, any design seed — distinct
+    grid cells always yield distinct factor fingerprints."""
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(2, len(ALL_AXIS_NAMES) + 1))
+    names = tuple(rng.choice(ALL_AXIS_NAMES, size=k, replace=False))
+    grid = FactorGrid(sim_axes(names), design_seed=seed)
+    backend = SimBackend(p=4, seed0=seed, sync_kw=dict(FAST_SYNC))
+    design = ExperimentDesign(n_launch_epochs=2, nrep=5, seed=seed)
+    fps = [c.factors(backend, design).fingerprint() for c in grid.cells()]
+    assert len(set(fps)) == len(fps)
+
+
+def test_scheduler_rejects_fingerprint_collisions():
+    """An axis whose levels the backend cannot express must fail loudly at
+    compile time, not merge two experiments under one store key."""
+    grid = FactorGrid((
+        # ci_level is inert (and unfingerprinted) in fixed-nrep mode, so
+        # its two "levels" collapse onto one factor set
+        FactorAxis("ci_level", (0.95, 0.99), target="design"),
+        FactorAxis("dtype", ("float32", "float64")),
+    ))
+    spec = SweepSpec(grid, [TestCase("allreduce", 256)], ExperimentDesign(2, 5))
+    with pytest.raises(ValueError, match="share fingerprint"):
+        SweepScheduler(spec, SimBackend(p=4, sync_kw=dict(FAST_SYNC))).compile()
+
+
+# ---------------------------------------------------------------------------
+# Factor-capture & comparability hygiene
+# ---------------------------------------------------------------------------
+
+def test_capture_failure_is_visible_in_factors(monkeypatch):
+    """A degraded capture must record why, and must not fingerprint-match
+    a healthy capture."""
+    import jax
+
+    healthy = capture_factors()
+
+    def boom():
+        raise RuntimeError("no backends")
+
+    monkeypatch.setattr(jax, "default_backend", boom)
+    degraded = capture_factors()
+    assert degraded.backend == "unknown"
+    reasons = dict(degraded.extra)
+    assert "RuntimeError: no backends" in reasons["capture_failure"]
+    assert degraded.fingerprint() != healthy.fingerprint()
+
+
+def test_assert_comparable_names_exactly_the_differing_factors():
+    a = capture_factors(sync_method="hca", dtype="float32")
+    b = capture_factors(sync_method="skampi", dtype="float64")
+    with pytest.raises(ValueError) as ei:
+        assert_comparable(a, b, factor_under_test=("window_size_us",))
+    msg = str(ei.value)
+    assert "'sync_method'" in msg and "'dtype'" in msg
+    for name in a.to_dict():
+        if name not in ("sync_method", "dtype", "window_size_us"):
+            assert f"'{name}'" not in msg, name
+    # the declared factor under test is never reported as a conflict
+    assert_comparable(a, b, factor_under_test=("sync_method", "dtype"))
+
+
+# ---------------------------------------------------------------------------
+# Sweep scheduler: execution, persistence, resume
+# ---------------------------------------------------------------------------
+
+def test_sweep_runs_and_persists(tmp_path):
+    spec, backend = _small_sweep()
+    store = ResultStore(tmp_path / "s.jsonl")
+    res = SweepScheduler(spec, backend, store).run()
+    assert len(res.cells) == 4
+    assert res.n_cells_measured == 4 and res.n_cells_resumed == 0
+    assert len({c.fingerprint for c in res.cells}) == 4
+    assert store.sweeps() == [res.sweep_id]
+    assert set(store.sweep_cells(res.sweep_id)) == {0, 1, 2, 3}
+    man = store.sweep_manifest(res.sweep_id)
+    assert [n["name"] for n in man["axes"]] == ["tuning", "dtype"]
+
+
+def test_sweep_resume_measures_nothing(tmp_path, monkeypatch):
+    spec, backend = _small_sweep()
+    path = tmp_path / "s.jsonl"
+    first = SweepScheduler(spec, backend, ResultStore(path)).run()
+
+    calls = []
+    orig = SimBackend.measure
+    monkeypatch.setattr(
+        SimBackend, "measure",
+        lambda self, ctx, case, nrep: calls.append(case) or
+        orig(self, ctx, case, nrep))
+    again = SweepScheduler(spec, backend, ResultStore(path)).run()
+    assert not calls
+    assert again.n_cells_resumed == 4 and again.n_cells_measured == 0
+    assert again.sweep_id == first.sweep_id
+    for c0, c1 in zip(first.cells, again.cells):
+        case = c0.table.cases()[0]
+        np.testing.assert_array_equal(c0.table.medians(case),
+                                      c1.table.medians(case))
+
+
+def test_sweep_kill_resume_skips_completed_cells(tmp_path, monkeypatch):
+    """The acceptance scenario: a sweep killed after two cells resumes
+    without re-measuring them, and ends with the full run's results."""
+    spec, backend = _small_sweep()
+    path = tmp_path / "s.jsonl"
+    full = SweepScheduler(spec, backend, ResultStore(path)).run()
+
+    lines = path.read_text().splitlines()
+    markers = [i for i, ln in enumerate(lines) if '"sweep-cell"' in ln]
+    killed = tmp_path / "killed.jsonl"
+    killed.write_text("\n".join(lines[:markers[1] + 1]) + "\n")
+
+    calls = []
+    orig = SimBackend.measure
+    monkeypatch.setattr(
+        SimBackend, "measure",
+        lambda self, ctx, case, nrep: calls.append(case) or
+        orig(self, ctx, case, nrep))
+    res = SweepScheduler(spec, backend, ResultStore(killed)).run()
+    assert res.n_cells_resumed == 2 and res.n_cells_measured == 2
+    # only the two unfinished cells were measured: epochs x cases each
+    d = spec.design
+    assert len(calls) == 2 * d.n_launch_epochs * len(spec.cases)
+    for c_full, c_res in zip(full.cells, res.cells):
+        case = c_full.table.cases()[0]
+        np.testing.assert_array_equal(c_full.table.medians(case),
+                                      c_res.table.medians(case))
+
+
+def test_sweep_parallel_matches_serial(tmp_path):
+    spec, backend = _small_sweep()
+    serial = SweepScheduler(spec, backend).run()
+    store = ResultStore(tmp_path / "p.jsonl")
+    par = SweepScheduler(spec, backend, store, n_workers=2).run()
+    assert par.n_cells_measured == 4
+    assert set(store.sweep_cells(par.sweep_id)) == {0, 1, 2, 3}
+    for cs, cp in zip(serial.cells, par.cells):
+        case = cs.table.cases()[0]
+        np.testing.assert_array_equal(cs.table.medians(case),
+                                      cp.table.medians(case))
+
+
+def test_sweep_cell_round_trips_against_standalone_campaign(tmp_path):
+    """A sweep cell's stored results are the *same experiment* as a
+    standalone campaign built from the cell's own factors — they share a
+    fingerprint and compare_tables sees identical distributions."""
+    spec, backend = _small_sweep()
+    store = ResultStore(tmp_path / "s.jsonl")
+    res = SweepScheduler(spec, backend, store).run()
+
+    cell_res = res.cells[-1]                     # the mistuned cell
+    cell_backend, cell_design = cell_res.cell.materialize(backend,
+                                                          spec.design)
+    alone = ResultStore(tmp_path / "alone.jsonl")
+    standalone = Campaign(CampaignSpec(spec.cases, cell_design, name="alone"),
+                          cell_backend, alone).run()
+    assert standalone.fingerprint == cell_res.fingerprint
+
+    rows = compare_tables(store.to_table(cell_res.fingerprint),
+                          alone.to_table(standalone.fingerprint))
+    assert len(rows) == len(spec.cases)
+    for row in rows:
+        assert row.ratio == pytest.approx(1.0)
+        assert row.verdict == "indistinguishable"
+
+
+def test_sweep_fraction_raise_resumes_nested_cells(tmp_path, monkeypatch):
+    """Raising a fractional grid's fraction re-declares a new sweep
+    manifest, but the nested cells' measurements are the same experiments
+    — they must resume, not re-measure."""
+    from dataclasses import replace
+
+    spec, backend = _small_sweep(axes=("tuning", "sync_method", "dtype"))
+    half = replace(spec, grid=replace(spec.grid, fraction=0.5))
+    path = tmp_path / "s.jsonl"
+    first = SweepScheduler(half, backend, ResultStore(path)).run()
+    assert first.n_cells_measured == 4
+
+    calls = []
+    orig = SimBackend.measure
+    monkeypatch.setattr(
+        SimBackend, "measure",
+        lambda self, ctx, case, nrep: calls.append(case) or
+        orig(self, ctx, case, nrep))
+    full = SweepScheduler(spec, backend, ResultStore(path)).run()
+    assert full.sweep_id != first.sweep_id
+    assert full.n_cells_resumed == 4 and full.n_cells_measured == 4
+    d = spec.design
+    assert len(calls) == 4 * d.n_launch_epochs * len(spec.cases)
+    # the resumed cells got markers under the new sweep id too
+    assert len(ResultStore(path).sweep_cells(full.sweep_id)) == 8
+
+
+def test_serial_fallback_skips_cells_persisted_by_parallel(tmp_path):
+    """If the pool dies after persisting some cells, the serial fallback
+    must load them from the (snapshot-coherent) store, not duplicate
+    their records."""
+    spec, backend = _small_sweep()
+    path = tmp_path / "s.jsonl"
+    store = ResultStore(path)
+    sched = SweepScheduler(spec, backend, store)
+    compiled = sched.compile()
+    snapshot = store.snapshot()
+    manifest = dict(spec.grid.manifest(), name=spec.name, cases=[],
+                    cells=[[c.index, fp, c.levels()]
+                           for c, _, _, _, fp in compiled])
+    sweep_id = store.append_sweep(manifest, snapshot=snapshot)
+
+    # simulate the parallel path persisting cell 0, then the pool dying:
+    # run the serial fallback over the full pending list
+    cell, cbackend, design, factors, fp = compiled[0]
+    res = Campaign(spec.cell_spec(cell, design), cbackend).run()
+    store.append_campaign(factors, snapshot=snapshot)
+    for rec in res.records:
+        store.append_record(fp, rec)
+        snapshot.records.setdefault(fp, []).append(rec)
+    store.append_sweep_cell(sweep_id, cell.index, fp)
+    snapshot.sweep_cells_by_id.setdefault(sweep_id, {})[cell.index] = fp
+
+    out = sched._run_serial(compiled, sweep_id, snapshot)
+    assert out[0].n_measured == 0 and out[0].n_resumed == len(res.records)
+    assert all(out[i].n_measured > 0 for i in range(1, 4))
+    # no duplicate records for the pre-persisted cell
+    assert len(ResultStore(path).records(fp)) == len(res.records)
+
+
+def test_make_sync_rejects_mislabeled_hca_variant():
+    from repro.core import make_sync
+
+    assert make_sync("hca").hierarchical_intercepts is False
+    assert make_sync("hca2").hierarchical_intercepts is True
+    with pytest.raises(TypeError, match="implied by the algorithm name"):
+        make_sync("hca", hierarchical_intercepts=True)
+
+
+def test_sweep_records_carry_host(tmp_path):
+    import platform
+
+    spec, backend = _small_sweep()
+    store = ResultStore(tmp_path / "s.jsonl")
+    res = SweepScheduler(spec, backend, store).run()
+    recs = store.records(res.cells[0].fingerprint)
+    assert all(r.meta.get("host") == platform.node() for r in recs)
+    rows = store.to_table(res.cells[0].fingerprint).to_rows()
+    assert all(r["host"] == platform.node() for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# Factor-impact analysis
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def impact_sweep(tmp_path_factory):
+    spec, backend = _small_sweep(axes=("tuning", "sync_method", "dtype"),
+                                 n_launch_epochs=5, nrep=30,
+                                 msizes=(512, 4096))
+    store = ResultStore(tmp_path_factory.mktemp("sweep") / "s.jsonl")
+    return SweepScheduler(spec, backend, store).run(), store
+
+
+def test_injected_factor_ranks_top_and_dtype_stays_null(impact_sweep):
+    res, _ = impact_sweep
+    effects = main_effects(cells_from_result(res))
+    top = effects[0]
+    assert top.axis == "tuning" and top.significant
+    assert top.levels == ("mistuned", "stock")
+    assert top.effect_size > 0.9
+    dtype = [e for e in effects if e.axis == "dtype"][0]
+    assert not dtype.significant
+    assert dtype.effect_size == pytest.approx(0.0, abs=1e-12)
+    assert effects[-1].axis == "dtype"
+
+
+def test_effects_from_store_match_in_memory(impact_sweep):
+    res, store = impact_sweep
+    eff_mem = main_effects(cells_from_result(res))
+    eff_disk = main_effects(cells_from_store(store))
+    assert [e.axis for e in eff_mem] == [e.axis for e in eff_disk]
+    for a, b in zip(eff_mem, eff_disk):
+        assert a.p_holm == pytest.approx(b.p_holm)
+        assert a.effect_size == pytest.approx(b.effect_size)
+
+
+def test_pairwise_effects_are_directional(impact_sweep):
+    res, _ = impact_sweep
+    effects = main_effects(cells_from_result(res))
+    pair = effects[0].pairs[0]
+    assert pair.slower == "mistuned" and pair.faster == "stock"
+    assert pair.p_holm <= 0.05 and pair.delta > 0.9
+
+
+def test_interaction_screen_and_report_format(impact_sweep):
+    res, _ = impact_sweep
+    cells = cells_from_result(res)
+    effects = main_effects(cells)
+    inter = interaction_screen(cells)
+    assert len(inter) == 3                      # 3 axis pairs
+    assert all(0.0 <= it.score <= 2.0 for it in inter)
+    report = format_factor_report(effects, inter)
+    lines = report.splitlines()
+    assert lines[1].split()[0] == "factor"
+    assert lines[2].split()[0] == "tuning"      # ranked first
+    assert "MATTERS" in lines[2]
+    assert "dtype" in report and "factors matter" in report
+
+
+def test_analysis_rejects_single_level_axis():
+    from repro.sweeps.effects import CellData
+
+    cells = [CellData(0, {"a": "x"}, {("op", 1): np.ones(3)}),
+             CellData(1, {"a": "x"}, {("op", 1): np.ones(3) * 2})]
+    with pytest.raises(ValueError, match="single level"):
+        main_effects(cells)
