@@ -35,6 +35,21 @@ Options:
                   cells over a process pool, ``--seed`` re-rolls it.
   --axes NAMES    comma-separated subset of the stock factor axes for
                   ``--sweep`` (default: tuning,sync_method,window_us,dtype)
+  --archive DIR   run-archive directory (``repro.history.RunArchive``); the
+                  audit campaign registers its store here
+  --audit         reproducibility-audit mode: run the fixed sim audit
+                  campaign, register it into ``--archive``, and issue TOST
+                  equivalence verdicts against the baseline run (latest
+                  archived run sharing the factor fingerprint, or the run
+                  pinned by ``--baseline``). Prints the drift report; exits
+                  1 when any cell is DRIFTED, so it gates CI directly. The
+                  first run into an empty archive registers as the initial
+                  reference and exits 0.
+  --baseline TAG  audit against the archived run tagged TAG
+  --tag TAG       register this run under TAG (e.g. ``reference``)
+  --mistune OP    seed a drifted collective (4x latency, 3x overhead) into
+                  the audit run — the positive control: exactly OP's cells
+                  must come out DRIFTED
 """
 
 from __future__ import annotations
@@ -151,6 +166,66 @@ def _run_sweep(ap, args) -> None:
               file=sys.stderr)
 
 
+def _run_audit(ap, args) -> None:
+    """Reproducibility-audit mode: measure the fixed audit campaign,
+    archive it, and certify it EQUIVALENT to (or DRIFTED from) the
+    archived baseline — the paper's "reproducible" claim made executable."""
+    from repro.campaign import Campaign, CampaignSpec, ResultStore, SimBackend
+    from repro.core import ExperimentDesign, TestCase
+    from repro.history import (CONTROL_TAG, RunArchive, audit_runs,
+                               format_audit_report, format_drift)
+
+    audit_ops = ("allreduce", "bcast", "alltoall")
+    per_op_kw = {}
+    if args.mistune:
+        if args.mistune not in audit_ops:
+            # per_op_kw overrides are looked up by op name, so a typo (or
+            # an op the audit campaign never measures) would inject nothing
+            # and the "positive control" would silently pass
+            ap.error(f"--mistune: {args.mistune!r} is not an audited op "
+                     f"(one of {', '.join(audit_ops)})")
+        if args.tag:
+            ap.error("--tag cannot be combined with --mistune: seeded-drift "
+                     "runs are always tagged 'control' so they can never "
+                     "become a pinned baseline")
+        # the seeded-drift control: same defect shape as the sweep/guideline
+        # layers' mis-tuned collective (4x latency term, 3x fixed overhead)
+        per_op_kw = {args.mistune: dict(alpha=12e-6, gamma=6e-6)}
+    backend = SimBackend(p=8, seed0=args.seed, per_op_kw=per_op_kw,
+                         sync_kw=dict(n_fitpts=60, n_exchanges=20))
+    cases = [TestCase(op, m) for op in audit_ops for m in (512, 4096)]
+    design = ExperimentDesign(n_launch_epochs=12, nrep=40, seed=args.seed)
+    archive = RunArchive(args.archive)
+
+    store = ResultStore(archive.new_store_path())
+    res = Campaign(CampaignSpec(cases, design, name="repro-audit"),
+                   backend, store).run()
+    # a seeded-drift run is a *control*: archived for the record, but never
+    # eligible as a default baseline (a deliberately-bad run must not
+    # become the yardstick a later bad run "passes" against)
+    tag = args.tag or (CONTROL_TAG if args.mistune else None)
+    entry = archive.register(store.path, tag=tag)
+    print(f"# registered {store.path.name} as run {entry.run_id}"
+          + (f" [{entry.tag}]" if entry.tag else ""), file=sys.stderr)
+
+    try:
+        report = audit_runs(archive, entry, baseline_tag=args.baseline)
+    except (LookupError, KeyError) as e:
+        if args.baseline:
+            ap.error(f"--baseline: {e}")
+        print(f"# first run in {args.archive}: registered as the initial "
+              "reference, nothing to audit against yet", file=sys.stderr)
+        return
+    print(format_audit_report(
+        report, title=f"reproducibility audit [sim seed={args.seed}]"))
+    print(f"# archive: {args.archive} ({report.n_computed} cells computed, "
+          f"{report.n_resumed} resumed; campaign measured "
+          f"{res.n_measured} cells)", file=sys.stderr)
+    if not report.ok:
+        print(format_drift(report), file=sys.stderr)
+        raise SystemExit(1)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
         description="MPI-benchmarking-revisited reproduction suite")
@@ -178,14 +253,37 @@ def main() -> None:
                          "apply")
     ap.add_argument("--axes", default=None, metavar="NAMES",
                     help="comma-separated factor axes for --sweep")
+    ap.add_argument("--archive", default=None, metavar="DIR",
+                    help="run-archive directory for --audit")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the sim audit campaign, archive it, and issue "
+                         "TOST equivalence verdicts vs the baseline; exit 1 "
+                         "on DRIFTED")
+    ap.add_argument("--baseline", default=None, metavar="TAG",
+                    help="audit against the archived run tagged TAG")
+    ap.add_argument("--tag", default=None, metavar="TAG",
+                    help="register this audit run under TAG")
+    ap.add_argument("--mistune", default=None, metavar="OP",
+                    help="seed a drifted collective into the audit run "
+                         "(positive control)")
     args = ap.parse_args()
     if args.seed < 0:
         ap.error("--seed must be >= 0 (it offsets non-negative RNG seeds)")
     if args.axes and not args.sweep:
         ap.error("--axes only makes sense with --sweep")
+    if args.audit and not args.archive:
+        ap.error("--audit needs --archive DIR (where runs are registered)")
+    for flag, val in (("--baseline", args.baseline), ("--tag", args.tag),
+                      ("--mistune", args.mistune)):
+        if val and not args.audit:
+            ap.error(f"{flag} only makes sense with --audit")
 
     if args.compare:
         _compare_stores(ap, *args.compare)
+        return
+
+    if args.audit:
+        _run_audit(ap, args)
         return
 
     if args.guidelines:

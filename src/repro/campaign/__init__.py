@@ -20,7 +20,7 @@ live* (:class:`ResultStore`). ::
 from .backends import (JaxBackend, KernelBackend, MeasurementBackend,
                        SimBackend, ensure_host_devices)
 from .core import Campaign, CampaignResult, CampaignSpec
-from .store import ResultStore, StoreSnapshot
+from .store import SCHEMA_VERSION, ResultStore, StoreSnapshot
 from .sweep import CellResult, SweepResult, SweepScheduler, SweepSpec
 
 __all__ = [
@@ -34,6 +34,7 @@ __all__ = [
     "CampaignSpec",
     "ResultStore",
     "StoreSnapshot",
+    "SCHEMA_VERSION",
     "SweepSpec",
     "SweepScheduler",
     "SweepResult",

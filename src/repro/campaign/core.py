@@ -70,13 +70,23 @@ class CampaignResult:
 
 
 class Campaign:
-    """Run a :class:`CampaignSpec` on a backend, optionally through a store."""
+    """Run a :class:`CampaignSpec` on a backend, optionally through a store.
+
+    ``archive`` — a :class:`~repro.history.RunArchive` — auto-registers the
+    store into the cross-run archive after the campaign finishes, so every
+    persisted campaign is immediately addressable as an audit baseline or
+    candidate; the registered run id lands in ``result.meta["archived_run"]``.
+    """
 
     def __init__(self, spec: CampaignSpec, backend: MeasurementBackend,
-                 store: ResultStore | None = None):
+                 store: ResultStore | None = None, archive=None):
+        if archive is not None and store is None:
+            raise ValueError("Campaign: an archive needs a store to "
+                             "register (pass store= as well)")
         self.spec = spec
         self.backend = backend
         self.store = store
+        self.archive = archive
 
     def run(self, snapshot: StoreSnapshot | None = None) -> CampaignResult:
         """Execute (or resume) the campaign. ``snapshot`` — a
@@ -123,6 +133,10 @@ class Campaign:
                 n_measured += 1
 
         table = analyze_records(records, design.outlier_filter)
+        meta = spec.meta()
+        if self.archive is not None:
+            entry = self.archive.register(store.path)
+            meta["archived_run"] = entry.run_id
         return CampaignResult(records=records, table=table, factors=factors,
                               fingerprint=fingerprint, n_measured=n_measured,
-                              n_resumed=n_resumed, meta=spec.meta())
+                              n_resumed=n_resumed, meta=meta)

@@ -19,6 +19,20 @@ Appending is atomic at line granularity, times round-trip exactly
 mid-write) is skipped on load. The fingerprint key means one file can hold
 many campaigns; :meth:`ResultStore.to_table` makes a store directly
 consumable by :func:`~repro.core.compare.compare_tables`.
+
+Two bookkeeping line kinds make stores safe to *archive* across time
+(:mod:`repro.history`):
+
+  ``{"kind": "schema", "version": N}``
+      stamped as the first line of every new store. Unknown *within*-version
+      line kinds stay forward-compatible (readers filter by kind), but a
+      file declaring a future schema version refuses to load — silently
+      warn-and-dropping its lines would corrupt a resume, the worst failure
+      mode for an append-only format;
+
+  ``{"kind": "meta", ...}``
+      free-form metadata (archive registration stamps: run id, tag,
+      registration time), excluded from the store's content identity.
 """
 
 from __future__ import annotations
@@ -38,7 +52,11 @@ from repro.core.design import (MeasurementRecord, ResultTable, TestCase,
                                analyze_records)
 from repro.core.factors import FactorSet
 
-__all__ = ["ResultStore", "StoreSnapshot"]
+__all__ = ["ResultStore", "StoreSnapshot", "SCHEMA_VERSION"]
+
+#: Version of the JSONL line schema this build writes (and the newest it
+#: reads). Bump when a line kind changes incompatibly.
+SCHEMA_VERSION = 1
 
 
 def _record_from(o: dict) -> MeasurementRecord:
@@ -65,6 +83,7 @@ class StoreSnapshot:
     """
 
     campaign_specs: dict = field(default_factory=dict)   # fp -> last spec
+    campaign_factors: dict = field(default_factory=dict)  # fp -> factor dict
     records: dict = field(default_factory=dict)          # fp -> [records]
     sweeps: list = field(default_factory=list)           # ids, file order
     manifests: dict = field(default_factory=dict)        # id -> manifest
@@ -85,9 +104,50 @@ class ResultStore:
 
     def _append(self, obj: dict) -> None:
         self.path.parent.mkdir(parents=True, exist_ok=True)
+        header = None
+        if obj.get("kind") != "schema" and (
+                not self.path.exists() or self.path.stat().st_size == 0):
+            header = dict(kind="schema", version=SCHEMA_VERSION)
         with open(self.path, "a") as f:
+            if header is not None:
+                f.write(json.dumps(header, sort_keys=True) + "\n")
             f.write(json.dumps(obj, sort_keys=True) + "\n")
             f.flush()
+
+    def append_meta(self, **fields) -> None:
+        """Append a free-form metadata line (``kind="meta"``) — e.g. the
+        archive-registration stamp. Meta lines are bookkeeping, not data:
+        they are excluded from the store's content identity
+        (:meth:`~repro.history.RunArchive.register` hashes around them),
+        so stamping a store does not turn it into a different run."""
+        self._append(dict(kind="meta", **_jsonable(fields)))
+
+    def meta(self) -> dict:
+        """All metadata lines merged in file order (later stamps win)."""
+        out: dict = {}
+        for obj in self._lines():
+            if obj.get("kind") == "meta":
+                out.update({k: v for k, v in obj.items() if k != "kind"})
+        return out
+
+    def schema_version(self) -> int:
+        """The file's declared schema version (0 = legacy, pre-header)."""
+        if not self.path.exists():
+            return SCHEMA_VERSION
+        with open(self.path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    obj = json.loads(line)
+                except json.JSONDecodeError:
+                    return 0
+                if isinstance(obj, dict) and obj.get("kind") == "schema":
+                    v = obj.get("version")
+                    return v if isinstance(v, int) else 0
+                return 0
+        return 0
 
     def append_campaign(self, factors: FactorSet, spec: dict | None = None,
                         snapshot: StoreSnapshot | None = None) -> str:
@@ -119,6 +179,7 @@ class ResultStore:
                               factors=factors.to_dict(), spec=spec))
             if snapshot is not None:
                 snapshot.campaign_specs[fp] = spec
+                snapshot.campaign_factors[fp] = factors.to_dict()
         return fp
 
     def append_record(self, fingerprint: str, rec: MeasurementRecord) -> None:
@@ -203,6 +264,7 @@ class ResultStore:
             kind = o.get("kind")
             if kind == "campaign":
                 snap.campaign_specs[o["fingerprint"]] = o.get("spec", {})
+                snap.campaign_factors[o["fingerprint"]] = o.get("factors", {})
             elif kind == "record":
                 snap.records.setdefault(o["fingerprint"],
                                         []).append(_record_from(o))
@@ -226,7 +288,7 @@ class ResultStore:
                 if not line:
                     continue
                 try:
-                    yield json.loads(line)
+                    obj = json.loads(line)
                 except json.JSONDecodeError:
                     # A truncated tail line (crashed writer) is expected and
                     # safe to drop — the cell was never fully measured — but
@@ -240,6 +302,21 @@ class ResultStore:
                         "re-measured on resume", RuntimeWarning,
                         stacklevel=3)
                     continue
+                if isinstance(obj, dict) and obj.get("kind") == "schema":
+                    # A *future* version is the one skew this reader must
+                    # not paper over: its line kinds may look like ours but
+                    # mean something else, and warn-and-drop would silently
+                    # re-measure (or worse, merge) a resumed campaign.
+                    version = obj.get("version")
+                    if not isinstance(version, int) \
+                            or version > SCHEMA_VERSION:
+                        raise ValueError(
+                            f"{self.path}: store declares schema version "
+                            f"{version!r}, but this build reads <= "
+                            f"{SCHEMA_VERSION} — refusing to load (upgrade "
+                            "the reader, or re-measure into a fresh store)")
+                    continue
+                yield obj
 
     def fingerprints(self) -> list[str]:
         """Campaign fingerprints in file (declaration) order."""

@@ -45,6 +45,7 @@ from .simnet import ClockParams, NetParams, SimNet
 from .stats import (
     autocorr_significant_lags,
     autocorrelation,
+    bootstrap_ci,
     chi2_sf,
     cliffs_delta,
     coefficient_of_variation,
@@ -56,6 +57,8 @@ from .stats import (
     relative_ci_width,
     significance_stars,
     t_ppf,
+    TostResult,
+    tost_wilcoxon,
     tukey_filter,
     wilcoxon_rank_sum,
 )
@@ -94,7 +97,8 @@ __all__ = [
     "significance_stars", "chi2_sf", "kruskal_wallis", "cliffs_delta",
     "mean_confidence_interval", "jarque_bera", "autocorrelation",
     "autocorr_significant_lags", "coefficient_of_variation", "normal_ppf",
-    "t_ppf", "relative_ci_width",
+    "t_ppf", "relative_ci_width", "TostResult", "tost_wilcoxon",
+    "bootstrap_ci",
     # design & comparison
     "ExperimentDesign", "TestCase", "run_design", "analyze_records",
     "ResultTable", "EpochSummary", "MeasurementRecord", "case_orders",

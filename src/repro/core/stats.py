@@ -11,7 +11,10 @@ method needs, so the framework has no SciPy dependency on cluster hosts:
   * normality diagnostics (Jarque-Bera; the paper uses Kolmogorov-Smirnov /
     Shapiro-Wilk — JB plays the same gatekeeper role for the t-test),
   * autocorrelation function with significance bounds (§5.3, Fig. 18),
-  * significance stars for p-values as printed in Figs. 28/30.
+  * significance stars for p-values as printed in Figs. 28/30,
+  * TOST equivalence testing and percentile-bootstrap CIs — the primitives
+    that let a *re-run* be positively certified as reproducing an archived
+    reference, not merely "not significantly different".
 """
 
 from __future__ import annotations
@@ -30,6 +33,9 @@ __all__ = [
     "relative_ci_width",
     "RankSumResult",
     "wilcoxon_rank_sum",
+    "TostResult",
+    "tost_wilcoxon",
+    "bootstrap_ci",
     "holm_bonferroni",
     "chi2_sf",
     "kruskal_wallis",
@@ -205,6 +211,8 @@ def wilcoxon_rank_sum(a: np.ndarray, b: np.ndarray,
     n1, n2 = a.size, b.size
     if n1 == 0 or n2 == 0:
         raise ValueError("empty sample")
+    if alternative not in ("two-sided", "less", "greater"):
+        raise ValueError(f"unknown alternative {alternative!r}")
     combined = np.concatenate([a, b])
     ranks, tie_term = _rank_with_ties(combined)
     r1 = float(np.sum(ranks[:n1]))
@@ -212,7 +220,15 @@ def wilcoxon_rank_sum(a: np.ndarray, b: np.ndarray,
     mu = n1 * n2 / 2.0
     n = n1 + n2
     sigma2 = n1 * n2 / 12.0 * ((n + 1) - tie_term / (n * (n - 1)))
-    sigma = math.sqrt(max(sigma2, 1e-300))
+    if sigma2 <= 0.0:
+        # every observation tied: under the permutation null every
+        # assignment yields this same U, so the exact p is 1 for every
+        # alternative — crucially NOT 0, which the continuity-corrected
+        # normal approximation would produce from the floored sigma (and
+        # which would let two bit-identical constant runs test "different")
+        return RankSumResult(statistic=u1, z=0.0, p_value=1.0,
+                             alternative=alternative, n_a=n1, n_b=n2)
+    sigma = math.sqrt(sigma2)
 
     def z_of(u: float, shift: float) -> float:
         return (u - mu + shift) / sigma
@@ -232,6 +248,98 @@ def wilcoxon_rank_sum(a: np.ndarray, b: np.ndarray,
         raise ValueError(f"unknown alternative {alternative!r}")
     return RankSumResult(statistic=u1, z=z, p_value=float(p),
                          alternative=alternative, n_a=n1, n_b=n2)
+
+
+@dataclass(frozen=True)
+class TostResult:
+    """Outcome of a two-one-sided-tests (TOST) equivalence test."""
+
+    p_value: float         # max of the two one-sided p-values
+    p_lower: float         # H_a: a > (1 - margin) * b  (not too far below)
+    p_upper: float         # H_a: a < (1 + margin) * b  (not too far above)
+    margin: float
+    n_a: int
+    n_b: int
+
+    def equivalent(self, alpha: float = 0.05) -> bool:
+        """Equivalence demonstrated at ``alpha`` — deliberately a method,
+        not a 5%-hardcoded property: certifying at the wrong level is the
+        dangerous direction, and family-wise users must pass their
+        *corrected* threshold."""
+        return self.p_value <= alpha
+
+
+def tost_wilcoxon(a: np.ndarray, b: np.ndarray,
+                  margin: float = 0.10) -> TostResult:
+    """Nonparametric TOST equivalence test with a *relative* margin.
+
+    Difference tests (the Wilcoxon above) can only ever *fail to refute*
+    sameness — "no significant difference" is weak evidence that gets
+    weaker as the sample shrinks. Certifying reproducibility needs the
+    burden of proof reversed: the null hypothesis here is *non*-equivalence
+    (``a`` below ``(1-margin)·b`` or above ``(1+margin)·b``), and only data
+    can overturn it. Both one-sided nulls are tested by the Wilcoxon
+    rank-sum against the margin-scaled ``b`` sample; rejecting both (the
+    reported ``p_value`` is the max, the standard intersection-union
+    argument, no multiplicity correction needed between the pair) concludes
+    that ``a`` lies within ``±margin`` of ``b`` on the ratio scale.
+
+    Run-times are strictly positive, which is what makes the relative
+    margin (and the scaling of ``b``) meaningful; both samples are
+    required to be > 0.
+
+    Each one-sided p is floored at ``1 / C(n_a+n_b, n_a)`` — the exact
+    probability of complete separation under H0, the smallest p the exact
+    rank-sum test can produce. The normal approximation dips *below* that
+    at tiny n, and for an equivalence test anti-conservatism is the
+    dangerous direction: it would let two or three noisy epochs "certify"
+    a reproduction.
+    """
+    if not 0.0 < margin < 1.0:
+        raise ValueError(f"margin must be in (0, 1), got {margin}")
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    if a.size == 0 or b.size == 0:
+        raise ValueError("empty sample")
+    if np.any(a <= 0) or np.any(b <= 0):
+        raise ValueError("tost_wilcoxon: a relative margin needs strictly "
+                         "positive samples (run-times)")
+    p_min = 1.0 / math.comb(a.size + b.size, a.size)
+    p_lower = max(p_min,
+                  wilcoxon_rank_sum(a, (1.0 - margin) * b, "greater").p_value)
+    p_upper = max(p_min,
+                  wilcoxon_rank_sum(a, (1.0 + margin) * b, "less").p_value)
+    return TostResult(p_value=float(max(p_lower, p_upper)),
+                      p_lower=float(p_lower), p_upper=float(p_upper),
+                      margin=float(margin), n_a=a.size, n_b=b.size)
+
+
+def bootstrap_ci(statistic, samples, n_boot: int = 1000,
+                 level: float = 0.95, seed: int = 0) -> tuple[float, float]:
+    """Percentile-bootstrap confidence interval of ``statistic(*samples)``.
+
+    Each sample is resampled independently with replacement (they come
+    from independent runs/epochs), the statistic is recomputed per
+    replicate, and the ``(1-level)/2`` tails of the replicate distribution
+    are the interval. Distribution-free — the right companion for a
+    statistic like the ratio of medians, whose sampling distribution has
+    no usable closed form in the paper's non-normal regime.
+    """
+    if not 0.0 < level < 1.0:
+        raise ValueError(f"level must be in (0, 1), got {level}")
+    if n_boot < 1:
+        raise ValueError(f"n_boot must be >= 1, got {n_boot}")
+    arrays = [np.asarray(s, dtype=np.float64) for s in samples]
+    if not arrays or any(s.size == 0 for s in arrays):
+        raise ValueError("empty sample")
+    rng = np.random.default_rng(seed)
+    reps = np.empty(n_boot, dtype=np.float64)
+    for i in range(n_boot):
+        reps[i] = statistic(*(s[rng.integers(0, s.size, s.size)]
+                              for s in arrays))
+    tail = 100.0 * (1.0 - level) / 2.0
+    lo, hi = np.percentile(reps, [tail, 100.0 - tail])
+    return float(lo), float(hi)
 
 
 def holm_bonferroni(pvals) -> np.ndarray:

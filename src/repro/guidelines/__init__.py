@@ -17,7 +17,7 @@ into "audits implementations". ::
 """
 
 from .engine import (DEFAULT_MSIZES, GuidelineReport, GuidelineVerdict,
-                     compile_cases, verify_guidelines)
+                     compile_cases, verdicts_from_table, verify_guidelines)
 from .report import format_report, format_violations
 from .rules import (KERNEL_GUIDELINES, SIM_GUIDELINES, Guideline,
                     default_guidelines)
@@ -30,6 +30,7 @@ __all__ = [
     "GuidelineVerdict",
     "GuidelineReport",
     "compile_cases",
+    "verdicts_from_table",
     "verify_guidelines",
     "DEFAULT_MSIZES",
     "format_report",

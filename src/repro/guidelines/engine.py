@@ -25,7 +25,7 @@ from repro.core.stats import holm_bonferroni
 from .rules import Guideline
 
 __all__ = ["GuidelineVerdict", "GuidelineReport", "compile_cases",
-           "verify_guidelines", "DEFAULT_MSIZES"]
+           "verdicts_from_table", "verify_guidelines", "DEFAULT_MSIZES"]
 
 DEFAULT_MSIZES: tuple[int, ...] = (1024, 8192)
 
@@ -107,6 +107,46 @@ def compile_cases(guidelines, msizes=DEFAULT_MSIZES) -> list[TestCase]:
     return out
 
 
+def verdicts_from_table(
+    guidelines,
+    table,
+    msizes=DEFAULT_MSIZES,
+    alpha: float = 0.05,
+    statistic: str = "median",
+) -> list[GuidelineVerdict]:
+    """The statistical half of verification, separated from measurement:
+    per-(guideline, msize) one-sided Wilcoxon on an already-measured
+    result table, Holm-corrected across the family.
+
+    Splitting this out is what makes the verdict procedure itself
+    *testable*: the soundness tier feeds it thousands of synthetic
+    null-hypothesis tables and pins the empirical false-violation rate —
+    the same code path a real campaign's verdicts take, not a re-derivation.
+    """
+    guidelines = list(guidelines)
+    if not guidelines:
+        raise ValueError("verdicts_from_table: empty guideline family")
+    cells: list[tuple[Guideline, int, ComparisonRow]] = []
+    for g in guidelines:
+        for m in _guideline_msizes(g, msizes):
+            lhs_case, rhs_case = g.cases(m)
+            cells.append((g, m, compare_cases(table, lhs_case, rhs_case,
+                                              statistic)))
+    p_holm = holm_bonferroni([row.p_a_greater for _, _, row in cells])
+    return [
+        GuidelineVerdict(
+            guideline=g, msize=m,
+            lhs_case=row.case, rhs_case=g.cases(m)[1],
+            lhs_us=row.avg_a * 1e6, rhs_us=row.avg_b * 1e6,
+            ratio=row.ratio,
+            p_violated=row.p_a_greater, p_holm=float(adj),
+            p_confirmed=row.p_a_less,
+            n_epochs=row.n_a, alpha=alpha,
+        )
+        for (g, m, row), adj in zip(cells, p_holm)
+    ]
+
+
 def verify_guidelines(
     guidelines,
     backend: MeasurementBackend,
@@ -134,27 +174,8 @@ def verify_guidelines(
     cases = compile_cases(guidelines, msizes)
     spec = CampaignSpec(cases=cases, design=design, name=name)
     res = Campaign(spec, backend, store).run()
-
-    cells: list[tuple[Guideline, int, ComparisonRow]] = []
-    for g in guidelines:
-        for m in _guideline_msizes(g, msizes):
-            lhs_case, rhs_case = g.cases(m)
-            cells.append((g, m, compare_cases(res.table, lhs_case, rhs_case,
-                                              statistic)))
-    p_holm = holm_bonferroni([row.p_a_greater for _, _, row in cells])
-
-    verdicts = [
-        GuidelineVerdict(
-            guideline=g, msize=m,
-            lhs_case=row.case, rhs_case=g.cases(m)[1],
-            lhs_us=row.avg_a * 1e6, rhs_us=row.avg_b * 1e6,
-            ratio=row.ratio,
-            p_violated=row.p_a_greater, p_holm=float(adj),
-            p_confirmed=row.p_a_less,
-            n_epochs=row.n_a, alpha=alpha,
-        )
-        for (g, m, row), adj in zip(cells, p_holm)
-    ]
+    verdicts = verdicts_from_table(guidelines, res.table, msizes=msizes,
+                                   alpha=alpha, statistic=statistic)
     return GuidelineReport(
         verdicts=verdicts, backend_name=backend.name, alpha=alpha,
         statistic=statistic, n_measured=res.n_measured,

@@ -147,9 +147,10 @@ def test_store_partial_resume_measures_only_missing(tmp_path):
     path = tmp_path / "a.jsonl"
     full = Campaign(spec, _sim(seed0=35), ResultStore(path)).run()
 
+    # first four lines: schema header, campaign declaration, two records
     lines = path.read_text().splitlines()
     cut = ResultStore(tmp_path / "cut.jsonl")
-    (tmp_path / "cut.jsonl").write_text("\n".join(lines[:3]) + "\n")
+    (tmp_path / "cut.jsonl").write_text("\n".join(lines[:4]) + "\n")
     assert cut.completed(full.fingerprint) == {("allreduce", 256, 0),
                                                ("allreduce", 256, 1)}
     resumed = Campaign(spec, _sim(seed0=35), cut).run()

@@ -234,7 +234,8 @@ def test_killed_guideline_campaign_resumes_missing_cells_only(tmp_path):
                              design=_design(), msizes=(1024,),
                              store=ResultStore(path))
     lines = path.read_text().splitlines()
-    n_keep = 1 + (len(lines) - 1) // 2    # declaration + half the records
+    # schema header + declaration + half the records
+    n_keep = 2 + (len(lines) - 2) // 2
     killed = tmp_path / "killed.jsonl"
     killed.write_text("\n".join(lines[:n_keep]) + "\n"
                       + '{"kind": "record", "fingerprint": "'[:40])
@@ -242,7 +243,7 @@ def test_killed_guideline_campaign_resumes_missing_cells_only(tmp_path):
         resumed = verify_guidelines(SIM_GUIDELINES, _sim(seed0=9),
                                     design=_design(), msizes=(1024,),
                                     store=ResultStore(killed))
-    assert resumed.n_resumed == n_keep - 1
+    assert resumed.n_resumed == n_keep - 2
     assert resumed.n_resumed + resumed.n_measured == full.n_measured
     assert len(resumed.verdicts) == len(full.verdicts)
     assert resumed.ok

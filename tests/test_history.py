@@ -1,0 +1,411 @@
+"""Reproducibility-audit subsystem: store schema versioning, the run
+archive (manifest-indexed lookups, content-hash idempotence), and the
+TOST verdict engine — including the acceptance scenario (same-seed runs
+certify EQUIVALENT, a mis-tuned collective drifts exactly its own cells)
+and audit kill/resume at cell granularity."""
+
+import json
+
+import numpy as np
+import pytest
+
+import repro.history.audit as audit_mod
+from repro.campaign import (SCHEMA_VERSION, Campaign, CampaignSpec,
+                            ResultStore, SimBackend)
+from repro.core import (EpochSummary, ExperimentDesign, ResultTable, TestCase)
+from repro.history import (RunArchive, audit_runs, audit_tables,
+                           format_audit_report, format_drift)
+
+FAST_SYNC = dict(n_fitpts=60, n_exchanges=20)
+AUDIT_CASES = [TestCase(op, m) for op in ("allreduce", "bcast")
+               for m in (512, 4096)]
+
+
+#: Quiet cost model: per-epoch medians spread ~±3-5% at p=8, so the ±10%
+#: TOST margin is certifiable from 12 launch epochs (noisier regimes
+#: correctly land in INCONCLUSIVE — tested on synthetic tables below).
+QUIET = dict(noise_sigma=0.01, tail_prob=0.02, epoch_bias_sigma=0.005)
+
+
+def _backend(seed0=0, per_op_kw=None):
+    return SimBackend(p=8, seed0=seed0, per_op_kw=per_op_kw or {},
+                      op_kw=dict(QUIET), sync_kw=dict(FAST_SYNC))
+
+
+def _design(**kw):
+    base = dict(n_launch_epochs=12, nrep=40, seed=5)
+    base.update(kw)
+    return ExperimentDesign(**base)
+
+
+def _run_into(archive, backend, tag=None, cases=AUDIT_CASES, design=None):
+    store = ResultStore(archive.new_store_path())
+    Campaign(CampaignSpec(cases, design or _design(), name="audit-test"),
+             backend, store).run()
+    return archive.register(store.path, tag=tag)
+
+
+def _table(cells: dict) -> ResultTable:
+    """A ResultTable straight from per-epoch median values — the synthetic
+    input that lets verdict code be tested without measuring anything."""
+    summaries = [
+        EpochSummary(case=TestCase(op, msize), epoch=e, mean=float(v),
+                     median=float(v), n_kept=1, n_raw=1)
+        for (op, msize), values in cells.items()
+        for e, v in enumerate(values)
+    ]
+    return ResultTable(summaries=summaries)
+
+
+# ---------------------------------------------------------------------------
+# Store schema versioning (the silent-version-skew bugfix)
+# ---------------------------------------------------------------------------
+
+def test_new_store_stamps_schema_header(tmp_path):
+    path = tmp_path / "a.jsonl"
+    store = ResultStore(path)
+    store.append_campaign(_backend().factors(_design()))
+    first = json.loads(path.read_text().splitlines()[0])
+    assert first == {"kind": "schema", "version": SCHEMA_VERSION}
+    assert store.schema_version() == SCHEMA_VERSION
+    # one header only, even across many appends
+    store.append_meta(note="x")
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert sum(1 for o in lines if o["kind"] == "schema") == 1
+
+
+def test_legacy_store_without_header_still_loads(tmp_path):
+    store = ResultStore(tmp_path / "legacy.jsonl")
+    res = Campaign(CampaignSpec([TestCase("allreduce", 256)],
+                                _design(n_launch_epochs=2, nrep=5)),
+                   _backend(), store).run()
+    # strip the header: the pre-versioning format
+    lines = [ln for ln in store.path.read_text().splitlines()
+             if '"schema"' not in ln]
+    legacy = tmp_path / "stripped.jsonl"
+    legacy.write_text("\n".join(lines) + "\n")
+    old = ResultStore(legacy)
+    assert old.schema_version() == 0
+    assert len(old.records(res.fingerprint)) == 2
+
+
+def test_future_schema_version_raises_instead_of_warning(tmp_path):
+    """The bugfix: version skew must fail loudly, not warn-and-drop lines
+    (which silently re-measures or merges a resumed campaign)."""
+    path = tmp_path / "future.jsonl"
+    path.write_text(json.dumps({"kind": "schema",
+                                "version": SCHEMA_VERSION + 1}) + "\n"
+                    + json.dumps({"kind": "record", "fingerprint": "x",
+                                  "op": "bcast", "msize": 1, "epoch": 0,
+                                  "times": [1.0]}) + "\n")
+    with pytest.raises(ValueError, match="schema version"):
+        ResultStore(path).records("x")
+    # resuming a campaign into it must refuse too (append consults _lines)
+    with pytest.raises(ValueError, match="schema version"):
+        Campaign(CampaignSpec([TestCase("allreduce", 256)],
+                              _design(n_launch_epochs=1, nrep=5)),
+                 _backend(), ResultStore(path)).run()
+
+
+def test_meta_lines_round_trip_and_stay_out_of_records(tmp_path):
+    store = ResultStore(tmp_path / "m.jsonl")
+    res = Campaign(CampaignSpec([TestCase("allreduce", 256)],
+                                _design(n_launch_epochs=2, nrep=5)),
+                   _backend(), store).run()
+    store.append_meta(archived=dict(run_id="abc", tag="ref"))
+    store.append_meta(note="second stamp")
+    meta = store.meta()
+    assert meta["archived"]["run_id"] == "abc" and meta["note"] == "second stamp"
+    assert len(store.records(res.fingerprint)) == 2
+
+
+# ---------------------------------------------------------------------------
+# Run archive: registration, manifest lookups, baseline resolution
+# ---------------------------------------------------------------------------
+
+def test_register_is_idempotent_and_stamping_preserves_identity(tmp_path):
+    archive = RunArchive(tmp_path / "arch")
+    entry = _run_into(archive, _backend())
+    # registration stamped the store; re-registering the stamped file must
+    # return the same run (meta lines are outside the content identity)
+    store = archive.open_store(entry)
+    assert store.meta()["archived"]["run_id"] == entry.run_id
+    again = archive.register(store.path)
+    assert again.run_id == entry.run_id
+    assert len(archive.entries()) == 1
+
+
+def test_grown_store_supersedes_its_entry(tmp_path):
+    archive = RunArchive(tmp_path / "arch")
+    entry = _run_into(archive, _backend(),
+                      cases=[TestCase("allreduce", 512)])
+    # resume the campaign with one more case: same file, more records
+    store = archive.open_store(entry)
+    Campaign(CampaignSpec([TestCase("allreduce", 512),
+                           TestCase("bcast", 512)], _design(),
+                          name="audit-test"), _backend(), store).run()
+    grown = archive.register(store.path)
+    assert grown.run_id != entry.run_id
+    assert grown.n_records > entry.n_records
+    assert len(archive.entries()) == 2          # history keeps both
+    assert [e.run_id for e in archive.runs()] == [grown.run_id]  # latest wins
+
+
+def test_manifest_carries_index_without_reparsing_stores(tmp_path):
+    archive = RunArchive(tmp_path / "arch")
+    entry = _run_into(archive, _backend(), tag="reference")
+    # lookups must work from the manifest alone — even if the store files
+    # vanish, runs()/entry()/baseline_for() still answer
+    archive.open_store(entry).path.unlink()
+    assert archive.runs(tag="reference")[0].run_id == entry.run_id
+    assert archive.entry(entry.run_id).fingerprints == entry.fingerprints
+    assert entry.host and entry.n_records == len(AUDIT_CASES) * 12
+    assert entry.names == ("audit-test",)
+    assert entry.schema_version == SCHEMA_VERSION
+    assert entry.factors["measurement_backend"] == "sim"
+
+
+def test_baseline_resolution_fingerprint_tag_and_name_fallback(tmp_path):
+    archive = RunArchive(tmp_path / "arch")
+    ref = _run_into(archive, _backend(), tag="reference")
+    cand = _run_into(archive, _backend())
+    assert archive.baseline_for(cand).run_id == ref.run_id   # same fingerprint
+    # a mis-tuned backend changes the fingerprint: the name fallback (and
+    # the tag pin) still find the reference
+    bad = _run_into(archive, _backend(per_op_kw={"bcast": dict(alpha=9e-6)}))
+    assert not (set(bad.fingerprints) & set(ref.fingerprints))
+    assert archive.baseline_for(bad).run_id == cand.run_id
+    assert archive.baseline_for(bad, tag="reference").run_id == ref.run_id
+    with pytest.raises(KeyError, match="no archived run tagged"):
+        archive.baseline_for(bad, tag="nonesuch")
+    # the first run has no baseline
+    assert archive.baseline_for(ref) is None
+
+
+def test_retagging_a_registered_run_supersedes_not_drops(tmp_path):
+    """Registering an unchanged store again *with a tag* must re-tag it
+    (e.g. pinning an auto-registered run as the reference), not silently
+    return the old untagged entry."""
+    archive = RunArchive(tmp_path / "arch")
+    entry = _run_into(archive, _backend())          # untagged
+    assert entry.tag is None
+    retagged = archive.register(archive.open_store(entry).path,
+                                tag="reference")
+    assert retagged.run_id == entry.run_id
+    assert retagged.tag == "reference"
+    assert retagged.timestamp == entry.timestamp    # age is unchanged
+    assert archive.runs(tag="reference")[0].run_id == entry.run_id
+    # id-based lookup sees the superseding entry, not the stale original
+    assert archive.entry(entry.run_id).tag == "reference"
+    # and it is idempotent at the new tag
+    assert len(archive.entries()) == 2
+    archive.register(archive.open_store(entry).path, tag="reference")
+    assert len(archive.entries()) == 2
+
+
+def test_control_runs_never_become_default_baselines(tmp_path):
+    """A seeded-drift (control) run stays archived but is skipped by
+    default baseline resolution — otherwise a second bad run would
+    'pass' its audit against the first one."""
+    from repro.history.archive import CONTROL_TAG
+
+    archive = RunArchive(tmp_path / "arch")
+    ref = _run_into(archive, _backend(), tag="reference")
+    mistuned = {"bcast": dict(alpha=12e-6, gamma=6e-6)}
+    bad1 = _run_into(archive, _backend(per_op_kw=mistuned), tag=CONTROL_TAG)
+    bad2 = _run_into(archive, _backend(per_op_kw=mistuned), tag=CONTROL_TAG)
+    # bad2 shares a fingerprint with bad1, but bad1 is a control: the
+    # default baseline is the honest reference, and the audit still fails
+    assert set(bad2.fingerprints) == set(bad1.fingerprints)
+    assert archive.baseline_for(bad2).run_id == ref.run_id
+    report = audit_runs(archive, bad2)
+    assert {c.op for c in report.drifted()} == {"bcast"}
+    # an explicit tag pin can still select a control deliberately
+    assert archive.baseline_for(bad2, tag=CONTROL_TAG).run_id == bad1.run_id
+
+
+def test_new_store_path_never_collides(tmp_path):
+    archive = RunArchive(tmp_path / "arch")
+    a = archive.new_store_path()
+    a.write_text("")
+    b = archive.new_store_path()
+    assert a.name == "run-000.jsonl" and b.name == "run-001.jsonl"
+
+
+def test_campaign_auto_registers_into_archive(tmp_path):
+    archive = RunArchive(tmp_path / "arch")
+    store = ResultStore(archive.new_store_path())
+    res = Campaign(CampaignSpec([TestCase("allreduce", 512)],
+                                _design(n_launch_epochs=2, nrep=5)),
+                   _backend(), store, archive=archive).run()
+    run_id = res.meta["archived_run"]
+    assert archive.entry(run_id).fingerprints == (res.fingerprint,)
+    with pytest.raises(ValueError, match="needs a store"):
+        Campaign(CampaignSpec([], _design()), _backend(), archive=archive)
+
+
+# ---------------------------------------------------------------------------
+# Verdict engine on synthetic tables
+# ---------------------------------------------------------------------------
+
+def test_audit_tables_identical_distributions_certify_equivalent():
+    rng = np.random.default_rng(0)
+    cells = {("allreduce", 512): rng.lognormal(-11, 0.02, 15)}
+    ref = _table(cells)
+    cand = _table({k: v * rng.lognormal(0, 0.005, v.size)
+                   for k, v in cells.items()})
+    report = audit_tables(ref, cand, margin=0.10)
+    assert report.all_equivalent and report.ok
+
+
+def test_audit_tables_shift_beyond_margin_drifts():
+    rng = np.random.default_rng(1)
+    base = rng.lognormal(-11, 0.02, 15)
+    ref = _table({("allreduce", 512): base, ("bcast", 512): base})
+    cand = _table({("allreduce", 512): base * 1.4,
+                   ("bcast", 512): base * rng.lognormal(0, 0.005, base.size)})
+    report = audit_tables(ref, cand, margin=0.10)
+    verdicts = {c.op: c.verdict for c in report.cells}
+    assert verdicts == {"allreduce": "DRIFTED", "bcast": "EQUIVALENT"}
+    assert not report.ok
+    drifted = report.drifted()[0]
+    assert drifted.ci_lo > 1.1 and drifted.ratio == pytest.approx(1.4, rel=0.1)
+    assert "allreduce @ msize=512" in format_drift(report)
+    assert format_drift(audit_tables(ref, ref)) == ""
+
+
+def test_audit_tables_small_sample_is_inconclusive_not_equivalent():
+    """The whole point of TOST: too little data must NOT pass the gate as
+    'no significant difference' — two identical epochs prove nothing, and
+    the exact-p floor keeps the normal approximation from pretending
+    otherwise."""
+    rng = np.random.default_rng(2)
+    cells = {("allreduce", 512): rng.lognormal(-11, 0.02, 2)}
+    ref, cand = _table(cells), _table({k: v.copy() for k, v in cells.items()})
+    report = audit_tables(ref, cand, margin=0.10)
+    assert report.cells[0].verdict == "INCONCLUSIVE"
+    assert report.cells[0].p_tost >= 1.0 / 6.0   # 1 / C(4, 2): the exact floor
+    assert report.ok                 # inconclusive does not fail the gate
+    assert not report.all_equivalent
+
+
+def test_constant_identical_runs_are_not_drifted():
+    """Degenerate determinism: a backend with quantized timings can yield
+    bit-identical *constant* per-epoch medians. All-tied samples carry no
+    ordering information — the exact rank-sum p is 1 — so the audit must
+    certify, not let a zero-variance normal approximation scream DRIFTED."""
+    from repro.core import wilcoxon_rank_sum
+
+    const = np.full(10, 12.5e-6)
+    for alt in ("two-sided", "less", "greater"):
+        assert wilcoxon_rank_sum(const, const, alt).p_value == 1.0
+    cells = {("allreduce", m): const.copy() for m in (512, 4096)}
+    report = audit_tables(_table(cells), _table(cells), margin=0.10)
+    assert report.all_equivalent
+    assert all(c.p_diff == 1.0 for c in report.cells)
+
+
+def test_audit_tables_requires_common_cells():
+    with pytest.raises(ValueError, match="no common"):
+        audit_tables(_table({("a", 1): np.ones(5)}),
+                     _table({("b", 1): np.ones(5)}))
+
+
+def test_audit_margin_validation():
+    from repro.core import tost_wilcoxon
+
+    with pytest.raises(ValueError, match="margin"):
+        tost_wilcoxon(np.ones(5), np.ones(5), margin=1.5)
+    with pytest.raises(ValueError, match="positive"):
+        tost_wilcoxon(np.zeros(5), np.ones(5), margin=0.1)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the acceptance scenario
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def seeded_archive(tmp_path_factory):
+    """One reference + one same-seed re-run + one mis-tuned run."""
+    archive = RunArchive(tmp_path_factory.mktemp("hist") / "arch")
+    ref = _run_into(archive, _backend(), tag="reference")
+    cand = _run_into(archive, _backend())
+    bad = _run_into(archive, _backend(
+        per_op_kw={"bcast": dict(alpha=12e-6, gamma=6e-6)}))
+    return archive, ref, cand, bad
+
+
+def test_same_seed_reruns_certify_all_equivalent(seeded_archive):
+    archive, ref, cand, _ = seeded_archive
+    report = audit_runs(archive, cand)
+    assert report.baseline.run_id == ref.run_id
+    assert report.all_equivalent
+    assert len(report.cells) == len(AUDIT_CASES)
+    assert not report.factor_diffs
+    out = format_audit_report(report, title="audit")
+    assert out.count("EQUIVALENT") >= len(AUDIT_CASES)
+
+
+def test_mistuned_collective_drifts_exactly_its_own_cells(seeded_archive):
+    archive, ref, _, bad = seeded_archive
+    report = audit_runs(archive, bad, baseline_tag="reference")
+    assert {c.op for c in report.drifted()} == {"bcast"}
+    assert all(c.verdict == "EQUIVALENT" for c in report.cells
+               if c.op != "bcast")
+    assert not report.ok
+    # the factor diff names the seeded defect, not the whole extra tuple
+    assert any(k.startswith("extra.per_op_kw") for k in report.factor_diffs)
+
+
+def test_audit_log_resumes_without_recomputation(seeded_archive, monkeypatch):
+    archive, ref, cand, _ = seeded_archive
+    first = audit_runs(archive, cand)
+    calls = []
+    orig = audit_mod._audit_cell
+    monkeypatch.setattr(audit_mod, "_audit_cell",
+                        lambda *a, **k: calls.append(a) or orig(*a, **k))
+    again = audit_runs(archive, cand)
+    assert not calls
+    assert again.n_computed == 0 and again.n_resumed == len(AUDIT_CASES)
+    assert [c.verdict for c in again.cells] == [c.verdict
+                                                for c in first.cells]
+    for a, b in zip(first.cells, again.cells):
+        assert a == b           # bootstrap CIs identical: per-cell seeds
+
+
+def test_killed_audit_recomputes_only_missing_cells(tmp_path, monkeypatch):
+    """The kill/resume scenario, mirrored from the sweep tests: an audit
+    killed mid-comparison keeps its finished cells in the audit log and
+    re-reads them; only the missing cells are recomputed — and the resumed
+    report is identical to an uninterrupted one."""
+    archive = RunArchive(tmp_path / "arch")
+    _run_into(archive, _backend(), tag="reference")
+    cand = _run_into(archive, _backend())
+    full = audit_runs(archive, cand)
+
+    # simulate the kill: keep the audit log only up to the second cell line
+    log = archive.root / "audits.jsonl"
+    lines = log.read_text().splitlines()
+    cell_lines = [i for i, ln in enumerate(lines) if '"audit-cell"' in ln]
+    assert len(cell_lines) == len(AUDIT_CASES)
+    log.write_text("\n".join(lines[:cell_lines[1] + 1]) + "\n")
+
+    calls = []
+    orig = audit_mod._audit_cell
+    monkeypatch.setattr(audit_mod, "_audit_cell",
+                        lambda *a, **k: calls.append(a) or orig(*a, **k))
+    resumed = audit_runs(archive, cand)
+    assert len(calls) == len(AUDIT_CASES) - 2
+    assert resumed.n_resumed == 2
+    assert resumed.n_computed == len(AUDIT_CASES) - 2
+    assert resumed.cells == full.cells       # verdicts, p-values, CIs
+    # and the log is complete again: a further run computes nothing
+    final = audit_runs(archive, cand)
+    assert final.n_computed == 0
+
+
+def test_audit_without_baseline_raises(tmp_path):
+    archive = RunArchive(tmp_path / "arch")
+    only = _run_into(archive, _backend())
+    with pytest.raises(LookupError, match="no baseline"):
+        audit_runs(archive, only)

@@ -8,14 +8,17 @@ from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     autocorr_significant_lags,
+    bootstrap_ci,
     chi2_sf,
     cliffs_delta,
+    holm_bonferroni,
     jarque_bera,
     kruskal_wallis,
     mean_confidence_interval,
     normal_ppf,
     significance_stars,
     t_ppf,
+    tost_wilcoxon,
     tukey_filter,
     wilcoxon_rank_sum,
 )
@@ -207,3 +210,121 @@ def test_cliffs_delta_antisymmetric(n1, n2, seed):
     d = cliffs_delta(a, b)
     assert -1.0 <= d <= 1.0
     assert abs(d + cliffs_delta(b, a)) < 1e-12
+
+
+@given(st.integers(2, 25), st.integers(2, 25), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_cliffs_delta_antisymmetric_under_heavy_ties(n1, n2, seed):
+    """Antisymmetry where it is actually at risk: integer-valued samples
+    with many cross-sample ties (ties count as neither > nor <)."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 5, n1).astype(np.float64)
+    b = rng.integers(0, 5, n2).astype(np.float64)
+    d = cliffs_delta(a, b)
+    assert -1.0 <= d <= 1.0
+    assert abs(d + cliffs_delta(b, a)) < 1e-12
+    assert cliffs_delta(a, a) == 0.0
+
+
+@given(st.lists(st.floats(0.0, 1.0), min_size=1, max_size=30))
+@settings(max_examples=60, deadline=None)
+def test_holm_dominates_raw_and_is_monotone(ps):
+    """Holm adjustment never *reduces* a p-value, stays in [0, 1], and is
+    monotone: a smaller raw p never ends up with a larger adjusted p."""
+    p = np.array(ps, dtype=np.float64)
+    adj = holm_bonferroni(p)
+    assert np.all(adj >= p) and np.all(adj <= 1.0)
+    order = np.argsort(p, kind="mergesort")
+    assert np.all(np.diff(adj[order]) >= 0.0)
+    # permutation-equivariant: adjusting a shuffled family shuffles the
+    # adjustments the same way
+    rng = np.random.default_rng(int(p.size))
+    perm = rng.permutation(p.size)
+    assert np.array_equal(holm_bonferroni(p[perm]), adj[perm])
+
+
+@given(st.lists(st.floats(0.0, 1.0), min_size=1, max_size=30),
+       st.floats(0.01, 0.2))
+@settings(max_examples=60, deadline=None)
+def test_holm_stepdown_idempotent_on_rejected_family(ps, alpha):
+    """The step-down procedure's self-consistency (its 'idempotence'):
+    re-running Holm on just the rejected subfamily rejects everything
+    again — a decision, once made, survives removal of the accepted
+    hypotheses. (The adjusted *values* shrink, since the subfamily is
+    smaller; the decisions cannot flip.)"""
+    p = np.array(ps, dtype=np.float64)
+    adj = holm_bonferroni(p)
+    rejected = p[adj <= alpha]
+    if rejected.size:
+        assert np.all(holm_bonferroni(rejected) <= alpha)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_kruskal_wallis_permutation_invariant(seed):
+    """(H, p) depend only on the group *memberships*: shuffling the
+    observations within groups and re-ordering the groups changes
+    nothing — including with heavy ties."""
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(2, 5))
+    groups = [rng.integers(0, 6, int(rng.integers(5, 15))).astype(np.float64)
+              for _ in range(k)]
+    h0, p0 = kruskal_wallis(groups)
+    shuffled = [rng.permutation(g) for g in groups]
+    reordered = [shuffled[i] for i in rng.permutation(k)]
+    h1, p1 = kruskal_wallis(reordered)
+    assert abs(h0 - h1) < 1e-9
+    assert abs(p0 - p1) < 1e-9
+
+
+def _tost_reference(a, b, margin):
+    """Scalar-loop reference for tost_wilcoxon: explicit O(n^2) pair
+    counting for U, the tie-corrected normal approximation written out
+    directly, and the exact complete-separation floor."""
+    from collections import Counter
+
+    def one_sided_p(x, y, alternative):
+        n1, n2 = len(x), len(y)
+        u1 = sum(1.0 for xi in x for yj in y if xi > yj) \
+            + 0.5 * sum(1.0 for xi in x for yj in y if xi == yj)
+        counts = Counter(list(x) + list(y))
+        tie_term = sum(t**3 - t for t in counts.values())
+        n = n1 + n2
+        mu = n1 * n2 / 2.0
+        sigma = math.sqrt(max(
+            n1 * n2 / 12.0 * ((n + 1) - tie_term / (n * (n - 1))), 1e-300))
+        if alternative == "greater":
+            z = (u1 - mu - 0.5) / sigma
+            p = 0.5 * math.erfc(z / math.sqrt(2.0))
+        else:
+            z = (u1 - mu + 0.5) / sigma
+            p = 0.5 * math.erfc(-z / math.sqrt(2.0))
+        return max(p, 1.0 / math.comb(n, n1))
+
+    lo = one_sided_p(list(a), list((1.0 - margin) * np.asarray(b)), "greater")
+    hi = one_sided_p(list(a), list((1.0 + margin) * np.asarray(b)), "less")
+    return max(lo, hi)
+
+
+@given(st.integers(2, 25), st.integers(2, 25), st.integers(0, 2**31 - 1),
+       st.floats(0.02, 0.5))
+@settings(max_examples=40, deadline=None)
+def test_tost_agrees_with_scalar_reference(n1, n2, seed, margin):
+    rng = np.random.default_rng(seed)
+    a = rng.lognormal(0.0, 0.2, n1)
+    b = rng.lognormal(rng.normal(0.0, 0.1), 0.2, n2)
+    res = tost_wilcoxon(a, b, margin)
+    assert abs(res.p_value - _tost_reference(a, b, margin)) < 1e-9
+    assert res.p_value == max(res.p_lower, res.p_upper)
+    assert 0.0 < res.p_value <= 1.0
+
+
+@given(st.integers(5, 20), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_bootstrap_ci_contains_point_estimate_and_orders(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.lognormal(0, 0.3, n)
+    lo, hi = bootstrap_ci(lambda s: float(np.median(s)), (x,),
+                          n_boot=300, seed=seed)
+    assert lo <= hi
+    assert x.min() <= lo and hi <= x.max()
