@@ -88,12 +88,15 @@ class Campaign:
         self.store = store
         self.archive = archive
 
-    def run(self, snapshot: StoreSnapshot | None = None) -> CampaignResult:
+    def run(self, snapshot: StoreSnapshot | None = None,
+            on_record=None) -> CampaignResult:
         """Execute (or resume) the campaign. ``snapshot`` — a
         :meth:`~repro.campaign.ResultStore.snapshot` of the attached store
         — replaces the per-run full-file resume scan; a sweep runs many
         campaigns against one growing file and passes the one snapshot it
-        took up front."""
+        took up front. ``on_record(record)`` fires after every *freshly
+        measured* cell is (if a store is attached) durably appended — the
+        progress heartbeat a fleet worker's lease is kept alive by."""
         spec, backend, store = self.spec, self.backend, self.store
         design = spec.design
         cases = list(spec.cases) or backend.default_cases()
@@ -129,6 +132,8 @@ class Campaign:
                                         meta=meta)
                 if store is not None:
                     store.append_record(fingerprint, rec)
+                if on_record is not None:
+                    on_record(rec)
                 records.append(rec)
                 n_measured += 1
 

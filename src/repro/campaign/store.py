@@ -33,6 +33,15 @@ Two bookkeeping line kinds make stores safe to *archive* across time
   ``{"kind": "meta", ...}``
       free-form metadata (archive registration stamps: run id, tag,
       registration time), excluded from the store's content identity.
+
+Fleet execution (:mod:`repro.fleet`) adds ``{"kind": "sweep-cell-failed",
+...}`` — a *quarantine* record written when a sweep cell exhausted its
+retry budget, carrying the factor fingerprint and last error so partial
+results stay honest about what is missing. Loading skips undecodable
+lines with a warning naming the line number and (best-effort) kind, and
+counts them in :attr:`ResultStore.n_corrupt`: a torn *tail* is the
+ordinary residue of a killed writer, a torn line *mid-file* is the
+louder signal of a crashed merge.
 """
 
 from __future__ import annotations
@@ -41,6 +50,7 @@ import hashlib
 import json
 import os
 import platform
+import re
 import warnings
 from dataclasses import dataclass, field
 from pathlib import Path
@@ -57,6 +67,15 @@ __all__ = ["ResultStore", "StoreSnapshot", "SCHEMA_VERSION"]
 #: Version of the JSONL line schema this build writes (and the newest it
 #: reads). Bump when a line kind changes incompatibly.
 SCHEMA_VERSION = 1
+
+
+def _line_kind(line: str) -> str:
+    """Best-effort ``kind`` of an undecodable line: a torn write usually
+    keeps its head, so the kind tag often survives the truncation — and a
+    warning that says *which* kind of line was lost tells the operator
+    whether a measurement, a marker, or mere bookkeeping is gone."""
+    m = re.search(r'"kind"\s*:\s*"([a-zA-Z0-9_-]+)"', line)
+    return f'"{m.group(1)}"' if m else "unknown-kind"
 
 
 def _record_from(o: dict) -> MeasurementRecord:
@@ -88,6 +107,8 @@ class StoreSnapshot:
     sweeps: list = field(default_factory=list)           # ids, file order
     manifests: dict = field(default_factory=dict)        # id -> manifest
     sweep_cells_by_id: dict = field(default_factory=dict)  # id -> {cell: fp}
+    sweep_failed_by_id: dict = field(default_factory=dict)  # id -> {cell: info}
+    n_corrupt: int = 0             # undecodable lines skipped in this pass
 
     def completed(self, fingerprint: str) -> set:
         return {(r.case.op, r.case.msize, r.epoch)
@@ -99,16 +120,33 @@ class ResultStore:
 
     def __init__(self, path: str | os.PathLike):
         self.path = Path(path)
+        #: Undecodable lines skipped during the most recent full parse —
+        #: the visible residue of torn writes (crashed writer, killed
+        #: merge). Zero on a healthy file; a nonzero count after loading
+        #: is the signal an audit should not silently absorb.
+        self.n_corrupt = 0
 
     # -- writing ----------------------------------------------------------
 
     def _append(self, obj: dict) -> None:
         self.path.parent.mkdir(parents=True, exist_ok=True)
         header = None
-        if obj.get("kind") != "schema" and (
-                not self.path.exists() or self.path.stat().st_size == 0):
-            header = dict(kind="schema", version=SCHEMA_VERSION)
+        heal = False
+        if not self.path.exists() or self.path.stat().st_size == 0:
+            if obj.get("kind") != "schema":
+                header = dict(kind="schema", version=SCHEMA_VERSION)
+        else:
+            # a killed writer can leave the file without a trailing
+            # newline (torn tail); appending straight onto it would glue
+            # the new line into the garbage and silently lose *this*
+            # append on the next load — terminate the torn line first so
+            # it is skipped alone
+            with open(self.path, "rb") as f:
+                f.seek(-1, os.SEEK_END)
+                heal = f.read(1) != b"\n"
         with open(self.path, "a") as f:
+            if heal:
+                f.write("\n")
             if header is not None:
                 f.write(json.dumps(header, sort_keys=True) + "\n")
             f.write(json.dumps(obj, sort_keys=True) + "\n")
@@ -231,6 +269,35 @@ class ResultStore:
         self._append(dict(kind="sweep-cell", sweep=sweep_id,
                           cell=int(index), fingerprint=fingerprint))
 
+    def append_sweep_cell_failed(self, sweep_id: str, index: int,
+                                 fingerprint: str, attempts: int,
+                                 error: str) -> None:
+        """Quarantine one grid cell: every retry failed, and the sweep is
+        degrading to partial-but-honest results instead of wedging. The
+        record carries the factor fingerprint and the last error, so the
+        analysis layer can say exactly *which* experiment is missing and
+        why — a silently absent cell would bias which cells get measured,
+        the §5.2 failure mode a fleet must not have."""
+        self._append(dict(kind="sweep-cell-failed", sweep=sweep_id,
+                          cell=int(index), fingerprint=fingerprint,
+                          attempts=int(attempts), error=str(error)[:500]))
+
+    def sweep_cells_failed(self, sweep_id: str) -> dict[int, dict]:
+        """``cell index -> quarantine info`` of every quarantined cell.
+
+        A cell later marked complete (a resumed fleet re-attempted it and
+        succeeded) is *removed*: completion supersedes quarantine."""
+        out: dict[int, dict] = {}
+        for o in self._lines():
+            if o.get("kind") == "sweep-cell-failed" and o["sweep"] == sweep_id:
+                out[int(o["cell"])] = dict(
+                    fingerprint=o["fingerprint"],
+                    attempts=int(o.get("attempts", 0)),
+                    error=o.get("error", ""))
+            elif o.get("kind") == "sweep-cell" and o["sweep"] == sweep_id:
+                out.pop(int(o["cell"]), None)
+        return out
+
     def sweeps(self) -> list[str]:
         """Sweep ids in declaration order."""
         out: list[str] = []
@@ -275,48 +342,75 @@ class ResultStore:
             elif kind == "sweep-cell":
                 snap.sweep_cells_by_id.setdefault(
                     o["sweep"], {})[int(o["cell"])] = o["fingerprint"]
+                # completion supersedes an earlier quarantine of the cell
+                snap.sweep_failed_by_id.get(o["sweep"], {}).pop(
+                    int(o["cell"]), None)
+            elif kind == "sweep-cell-failed":
+                snap.sweep_failed_by_id.setdefault(o["sweep"], {})[
+                    int(o["cell"])] = dict(
+                        fingerprint=o["fingerprint"],
+                        attempts=int(o.get("attempts", 0)),
+                        error=o.get("error", ""))
+        snap.n_corrupt = self.n_corrupt
         return snap
 
     # -- reading ----------------------------------------------------------
 
     def _lines(self) -> Iterable[dict]:
+        self.n_corrupt = 0
         if not self.path.exists():
             return
         with open(self.path) as f:
-            for lineno, line in enumerate(f, start=1):
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    obj = json.loads(line)
-                except json.JSONDecodeError:
-                    # A truncated tail line (crashed writer) is expected and
-                    # safe to drop — the cell was never fully measured — but
-                    # dropping it *silently* hides that a campaign was
-                    # killed mid-write; a bad line before the tail means
-                    # real corruption and deserves the louder wording.
+            raw = f.readlines()
+        last_lineno = len(raw)
+        for lineno, line in enumerate(raw, start=1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError:
+                self.n_corrupt += 1
+                kind = _line_kind(line)
+                if lineno == last_lineno:
+                    # A truncated tail line (crashed writer) is expected
+                    # and safe to drop — the cell was never fully measured
+                    # — but dropping it *silently* hides that a campaign
+                    # was killed mid-write.
                     warnings.warn(
-                        f"{self.path}:{lineno}: dropping undecodable JSONL "
-                        "line (truncated write from a killed campaign, or "
-                        "file corruption); the cell it held will be "
-                        "re-measured on resume", RuntimeWarning,
+                        f"{self.path}:{lineno}: dropping undecodable "
+                        f"{kind} tail line (truncated write from a killed "
+                        "campaign); the cell it held will be re-measured "
+                        "on resume", RuntimeWarning, stacklevel=3)
+                else:
+                    # Corruption *mid*-file cannot come from an ordinary
+                    # kill (appends are line-atomic); it is the residue of
+                    # a crash during a merge/compaction, or real file
+                    # damage — louder wording, and the count survives in
+                    # ``n_corrupt`` so federation and audits can report it.
+                    warnings.warn(
+                        f"{self.path}:{lineno}: dropping undecodable "
+                        f"{kind} line mid-file (crash during a store "
+                        "merge, or file corruption); "
+                        f"{self.n_corrupt} corrupt line(s) so far — "
+                        "counted in store.n_corrupt", RuntimeWarning,
                         stacklevel=3)
-                    continue
-                if isinstance(obj, dict) and obj.get("kind") == "schema":
-                    # A *future* version is the one skew this reader must
-                    # not paper over: its line kinds may look like ours but
-                    # mean something else, and warn-and-drop would silently
-                    # re-measure (or worse, merge) a resumed campaign.
-                    version = obj.get("version")
-                    if not isinstance(version, int) \
-                            or version > SCHEMA_VERSION:
-                        raise ValueError(
-                            f"{self.path}: store declares schema version "
-                            f"{version!r}, but this build reads <= "
-                            f"{SCHEMA_VERSION} — refusing to load (upgrade "
-                            "the reader, or re-measure into a fresh store)")
-                    continue
-                yield obj
+                continue
+            if isinstance(obj, dict) and obj.get("kind") == "schema":
+                # A *future* version is the one skew this reader must
+                # not paper over: its line kinds may look like ours but
+                # mean something else, and warn-and-drop would silently
+                # re-measure (or worse, merge) a resumed campaign.
+                version = obj.get("version")
+                if not isinstance(version, int) \
+                        or version > SCHEMA_VERSION:
+                    raise ValueError(
+                        f"{self.path}: store declares schema version "
+                        f"{version!r}, but this build reads <= "
+                        f"{SCHEMA_VERSION} — refusing to load (upgrade "
+                        "the reader, or re-measure into a fresh store)")
+                continue
+            yield obj
 
     def fingerprints(self) -> list[str]:
         """Campaign fingerprints in file (declaration) order."""

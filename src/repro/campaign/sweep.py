@@ -163,11 +163,7 @@ class SweepScheduler:
             else:
                 pending.append(entry)
 
-        measured = self._run_parallel(pending, sweep_id, snapshot) \
-            if self.n_workers > 1 and len(pending) > 1 else None
-        if measured is None:
-            measured = self._run_serial(pending, sweep_id, snapshot)
-        results.update(measured)
+        results.update(self._execute_pending(pending, sweep_id, snapshot))
 
         cells = [results[i] for i in sorted(results)]
         return SweepResult(
@@ -178,6 +174,19 @@ class SweepScheduler:
                       axes=[ax.name for ax in spec.grid.axes],
                       n_workers=self.n_workers),
         )
+
+    def _execute_pending(self, pending, sweep_id,
+                         snapshot) -> dict[int, CellResult]:
+        """How the not-yet-complete cells actually get measured — the one
+        hook a different execution strategy overrides (the fault-tolerant
+        lease-queue fleet in :mod:`repro.fleet` replaces exactly this).
+        Everything around it — compilation, manifests, cell-granular
+        resume, result assembly — is shared."""
+        measured = self._run_parallel(pending, sweep_id, snapshot) \
+            if self.n_workers > 1 and len(pending) > 1 else None
+        if measured is None:
+            measured = self._run_serial(pending, sweep_id, snapshot)
+        return measured
 
     def _cell_complete(self, cell, design, fp, sweep_id, done,
                        snapshot) -> bool:

@@ -41,6 +41,7 @@ from .mpi_ops import (
     make_op,
 )
 from .opexpr import OpTerm, format_opexpr, is_composite, parse_opexpr
+from .retry import RetryBudgetExceeded, RetryPolicy, retry_call
 from .simnet import ClockParams, NetParams, SimNet
 from .stats import (
     autocorr_significant_lags,
@@ -108,4 +109,6 @@ __all__ = [
     # factors
     "FactorSet", "capture_factors", "assert_comparable",
     "FactorAxis", "FactorGrid", "GridCell",
+    # retry / backoff
+    "RetryPolicy", "RetryBudgetExceeded", "retry_call",
 ]

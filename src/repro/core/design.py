@@ -331,21 +331,44 @@ def map_parallel(
     n_workers: int,
     what: str = "tasks",
     on_result: Callable[[int, Any], None] | None = None,
+    timeout: float | None = None,
+    max_restarts: int = 1,
+    retry: Any | None = None,
 ) -> list | None:
     """Run ``fn(*args)`` for every argtuple across a ``ProcessPoolExecutor``.
 
     The shared fan-out machinery of :func:`run_design` (launch epochs) and
-    the sweep scheduler (grid cells): a picklability pre-check and ``None``
-    on any pool-setup failure, so the caller falls back to the serial loop
-    instead of crashing. Results come back in submission order;
-    ``on_result(index, result)`` fires in the *parent* as each task
+    the sweep scheduler (grid cells). Results come back in submission
+    order; ``on_result(index, result)`` fires in the *parent* as each task
     completes (completion order), which is how a sharded sweep persists
     finished cells while later cells are still running.
+
+    Failure semantics distinguish *setup* from *execution*:
+
+    * **Setup failure** — unpicklable callables/args, or the first pool
+      refusing to spawn — returns ``None`` so the caller falls back to its
+      serial loop: nothing has run yet, serial is a faithful substitute.
+    * **Worker crash mid-run** (``BrokenProcessPool``) restarts the pool
+      and resubmits only the unfinished tasks, backing off between
+      restarts (``retry``, a :class:`~repro.core.retry.RetryPolicy`;
+      default two quick jittered restarts). The warning names exactly
+      which task indices were in flight. After ``max_restarts`` the
+      exception is **re-raised** — a pool that keeps dying is a fault the
+      caller must see, not silently absorb into a serial run whose
+      completion would misattribute the crash to nothing.
+    * **Stall** — no task completing within ``timeout`` seconds — raises
+      ``TimeoutError`` naming the in-flight tasks after terminating the
+      pool's workers: a hung worker must not wedge the campaign forever.
+      ``None`` (default) waits indefinitely, the pre-existing behavior.
     """
     import concurrent.futures as cf
     import multiprocessing as mp
     import pickle
 
+    from .retry import RetryPolicy
+
+    if not argtuples:
+        return []
     try:
         pickle.dumps((fn, argtuples))
     except Exception:
@@ -356,25 +379,71 @@ def map_parallel(
     mp_ctx = None
     if "fork" in mp.get_all_start_methods():
         mp_ctx = mp.get_context("fork")
-    try:
-        with cf.ProcessPoolExecutor(
-            max_workers=min(n_workers, len(argtuples)),
-            mp_context=mp_ctx,
-        ) as pool:
-            futures = {pool.submit(fn, *args): i
-                       for i, args in enumerate(argtuples)}
-            out: list = [None] * len(argtuples)
-            for fut in cf.as_completed(futures):
-                i = futures[fut]
-                out[i] = fut.result()
-                if on_result is not None:
-                    on_result(i, out[i])
+    if retry is None:
+        retry = RetryPolicy(base=0.1, max_delay=1.0,
+                            attempts=max_restarts + 1, seed=0)
+
+    out: list = [None] * len(argtuples)
+    done_idx: set[int] = set()
+    restarts = 0
+    while True:
+        pending_idx = [i for i in range(len(argtuples)) if i not in done_idx]
+        try:
+            pool = cf.ProcessPoolExecutor(
+                max_workers=min(n_workers, len(pending_idx)),
+                mp_context=mp_ctx)
+        except OSError as e:
+            if restarts:        # a pool ran and died, and now none spawns:
+                raise           # that is a fault, not a setup condition
+            warnings.warn(
+                f"map_parallel: no process pool available ({e!r}); running "
+                f"{what} serially", RuntimeWarning, stacklevel=3)
+            return None
+        try:
+            with pool:
+                futures = {pool.submit(fn, *argtuples[i]): i
+                           for i in pending_idx}
+                not_done = set(futures)
+                while not_done:
+                    done, not_done = cf.wait(
+                        not_done, timeout=timeout,
+                        return_when=cf.FIRST_COMPLETED)
+                    if not done:
+                        in_flight = sorted(futures[f] for f in not_done)
+                        # a hung worker would block pool.__exit__ forever;
+                        # kill the workers so the TimeoutError actually
+                        # returns control to the caller
+                        for p in getattr(pool, "_processes", {}).values():
+                            p.terminate()
+                        pool.shutdown(wait=False, cancel_futures=True)
+                        raise TimeoutError(
+                            f"map_parallel: no {what} completed within "
+                            f"{timeout}s; in flight: {in_flight}")
+                    for fut in done:
+                        i = futures[fut]
+                        out[i] = fut.result()
+                        done_idx.add(i)
+                        if on_result is not None:
+                            on_result(i, out[i])
             return out
-    except (OSError, cf.process.BrokenProcessPool, pickle.PicklingError) as e:
-        warnings.warn(
-            f"map_parallel: process pool failed ({e!r}); running {what} "
-            "serially", RuntimeWarning, stacklevel=3)
-        return None
+        except cf.process.BrokenProcessPool as e:
+            in_flight = sorted(i for i in pending_idx if i not in done_idx)
+            if restarts >= max_restarts:
+                raise cf.process.BrokenProcessPool(
+                    f"map_parallel: pool died {restarts + 1}x running {what}; "
+                    f"giving up with {len(in_flight)} tasks unfinished: "
+                    f"{in_flight}") from e
+            delay = retry.delay(restarts)
+            warnings.warn(
+                f"map_parallel: a worker process died ({e!r}); "
+                f"{len(in_flight)}/{len(argtuples)} {what} in flight: "
+                f"{in_flight}; restarting pool in {delay:.2f}s "
+                f"({restarts + 1}/{max_restarts} restarts)",
+                RuntimeWarning, stacklevel=3)
+            import time as _time
+
+            _time.sleep(delay)
+            restarts += 1
 
 
 def _run_epochs_parallel(design, epoch_factory, measure, orders, n_workers):

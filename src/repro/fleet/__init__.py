@@ -1,0 +1,33 @@
+"""Fault-tolerant fleet execution for factor sweeps.
+
+§5.2 of the paper treats a benchmark campaign as an *experiment*: which
+cells get measured must not depend on which machine happened to die.
+This package makes that a property of the scheduler rather than of luck:
+
+- :mod:`~repro.fleet.queue` — the lease-based work queue (claim →
+  heartbeat → expiry → jittered-backoff retry → quarantine), a pure
+  state machine tests drive on a fake clock;
+- :mod:`~repro.fleet.faults` — deterministic, seeded fault injection
+  (crashes, stragglers, torn writes, transient exceptions) so every
+  failure path above runs in tier-1 tests, not first in production;
+- :mod:`~repro.fleet.federation` — idempotent merging of per-worker
+  shard stores into one authoritative, resumable sweep store;
+- :mod:`~repro.fleet.scheduler` — the :class:`FleetScheduler` driving
+  real worker processes through all of the above, with the invariant
+  that the merged fleet store is record-identical to a serial no-fault
+  run (quarantined cells excepted, and explicitly reported).
+"""
+
+from .faults import (CRASH_EXIT_CODE, CrashFault, Fault, FaultPlan,
+                     FaultyBackend, TransientFault)
+from .federation import MergeStats, merge_stores
+from .queue import CellTask, LeaseQueue
+from .scheduler import FleetConfig, FleetScheduler, FleetSweepResult
+
+__all__ = [
+    "CellTask", "LeaseQueue",
+    "Fault", "FaultPlan", "FaultyBackend", "CrashFault", "TransientFault",
+    "CRASH_EXIT_CODE",
+    "MergeStats", "merge_stores",
+    "FleetConfig", "FleetScheduler", "FleetSweepResult",
+]

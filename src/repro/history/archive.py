@@ -30,6 +30,7 @@ import hashlib
 import json
 import platform
 import time
+import warnings
 from dataclasses import dataclass, field
 from pathlib import Path
 
@@ -60,13 +61,15 @@ class RunEntry:
     n_records: int = 0
     schema_version: int = 0
     factors: dict = field(default_factory=dict)  # last campaign's factor dict
+    n_corrupt: int = 0               # undecodable store lines at registration
 
     def to_dict(self) -> dict:
         return dict(kind="run", run_id=self.run_id, store=self.store,
                     timestamp=self.timestamp, host=self.host, tag=self.tag,
                     fingerprints=list(self.fingerprints),
                     names=list(self.names), n_records=self.n_records,
-                    schema_version=self.schema_version, factors=self.factors)
+                    schema_version=self.schema_version, factors=self.factors,
+                    n_corrupt=self.n_corrupt)
 
     @classmethod
     def from_dict(cls, o: dict) -> "RunEntry":
@@ -77,7 +80,8 @@ class RunEntry:
                    names=tuple(o.get("names", ())),
                    n_records=int(o.get("n_records", 0)),
                    schema_version=int(o.get("schema_version", 0)),
-                   factors=o.get("factors", {}))
+                   factors=o.get("factors", {}),
+                   n_corrupt=int(o.get("n_corrupt", 0)))
 
 
 def _content_hash(relpath: str, store_path: Path) -> str:
@@ -171,7 +175,17 @@ class RunArchive:
                 schema_version=store.schema_version(),
                 factors=(snap.campaign_factors.get(fingerprints[-1], {})
                          if fingerprints else {}),
+                n_corrupt=snap.n_corrupt,
             )
+            if snap.n_corrupt:
+                # a store carrying torn-write residue is still archivable
+                # (the loader skipped the damage), but an audit baseline
+                # with silent holes is worse than a loud one
+                warnings.warn(
+                    f"RunArchive.register: {store_path} had "
+                    f"{snap.n_corrupt} undecodable line(s) skipped at "
+                    "registration; recorded in the manifest entry's "
+                    "n_corrupt", RuntimeWarning, stacklevel=2)
         self.root.mkdir(parents=True, exist_ok=True)
         with open(self.manifest_path, "a") as f:
             f.write(json.dumps(entry.to_dict(), sort_keys=True) + "\n")

@@ -224,7 +224,8 @@ def test_store_warns_and_skips_truncated_tail_line(tmp_path):
     res = Campaign(spec, _sim(seed0=43), ResultStore(path)).run()
     with open(path, "a") as f:
         f.write('{"kind": "record", "fingerprint": "xyz", "op": "allre')
-    with pytest.warns(RuntimeWarning, match="undecodable JSONL line"):
+    with pytest.warns(RuntimeWarning,
+                      match=r'undecodable "record" tail line'):
         assert len(ResultStore(path).records(res.fingerprint)) == 2
 
 
