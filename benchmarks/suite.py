@@ -419,6 +419,85 @@ def bench_micro_run_windowed():
     return rows
 
 
+def bench_micro_run_windowed_rw():
+    """Engine microbenchmark (not a paper figure): the *random-walk* window
+    engine — batched drift-path inversion (``engine="batch_rw"``) vs the
+    scalar reference on the same campaign with ``rw_sigma > 0``
+    (nrep=10000, p=16). Before the batched engine, ``engine="auto"``
+    silently dropped every random-walk campaign onto the scalar path."""
+    nrep, p = 10000, 16
+    rows = []
+
+    def setup():
+        net = SimNet(p, seed=_seed(43), clocks=ClockParams(rw_sigma=1e-7))
+        sync = make_sync("hca", **SYNC_KW).synchronize(net)
+        return net, sync
+
+    timings = {}
+    for label in ("scalar", "batch_rw"):
+        net, sync = setup()
+        op = make_op("allreduce")
+        t0 = time.perf_counter()
+        wr = run_windowed(net, sync, op, 4096, nrep, 300e-6, engine=label)
+        timings[label] = time.perf_counter() - t0
+        rows.append((f"micro/run_windowed_rw_{label}",
+                     timings[label] / nrep * 1e6,
+                     f"wall={timings[label]:.3f}s mean={wr.valid_times.mean() * 1e6:.2f}us "
+                     f"invalid={wr.invalid_fraction * 100:.1f}%"))
+    rows.append(("micro/run_windowed_rw_speedup",
+                 timings["scalar"] / timings["batch_rw"],
+                 f"nrep={nrep} p={p} rw_sigma=1e-7 (x, not us)"))
+    return rows
+
+
+def bench_micro_simjax():
+    """Engine microbenchmark (not a paper figure): the jit-compiled JAX
+    window engine vs the vectorized numpy engine on one large campaign
+    (nrep=100000, p=64). Both walls include everything a campaign pays per
+    measure call (clock/sync coefficient extraction, RNG, transfers); jit
+    compilation is amortized by an untimed warm-up campaign, matching how
+    a multi-cell campaign reuses the compiled programs. The speedup row
+    (jax must beat numpy) is the CI gate for the accelerator port."""
+    from repro.simjax import have_jax
+
+    nrep, p, msize = 100000, 64, 4096
+    sync_kw = dict(n_fitpts=60, n_exchanges=20)
+
+    def setup(seed):
+        net = SimNet(p, seed=_seed(seed))
+        sync = make_sync("hca", **sync_kw).synchronize(net)
+        return net, sync
+
+    if not have_jax():
+        return [("micro/simjax_unavailable", 0.0, "jax not importable")]
+
+    op = make_op("allreduce")
+    for warm_seed in (901, 902):         # compile + first-dispatch warm-up
+        net, sync = setup(warm_seed)
+        run_windowed(net, sync, op, msize, nrep, 400e-6, engine="jax")
+
+    rows = []
+    timings = {}
+    for label, engine in (("numpy", "batch"), ("jax", "jax")):
+        walls = []
+        for trial in range(3):
+            net, sync = setup(900 + 10 * trial)
+            op = make_op("allreduce")
+            t0 = time.perf_counter()
+            wr = run_windowed(net, sync, op, msize, nrep, 400e-6,
+                              engine=engine)
+            walls.append(time.perf_counter() - t0)
+        timings[label] = min(walls)
+        rows.append((f"micro/simjax_{label}",
+                     timings[label] / nrep * 1e6,
+                     f"wall={timings[label]:.3f}s (best of 3) "
+                     f"mean={wr.times.mean() * 1e6:.2f}us"))
+    rows.append(("micro/simjax_speedup",
+                 timings["numpy"] / timings["jax"],
+                 f"nrep={nrep} p={p} (x, not us; >1 required)"))
+    return rows
+
+
 def bench_micro_sweeps():
     """Scheduler microbenchmark (not a paper figure): wall-clock of a
     4-cell factor sweep (grid compile + per-cell campaigns + factor-impact
@@ -512,6 +591,8 @@ ALL_BENCHES = [
     bench_fig27_30_comparison,
     bench_fig31_reproducibility,
     bench_micro_run_windowed,
+    bench_micro_run_windowed_rw,
+    bench_micro_simjax,
     bench_micro_sweeps,
     bench_real_step_functions,
 ]

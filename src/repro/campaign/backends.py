@@ -23,6 +23,7 @@ campaign reproduces the original records bit-for-bit.
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Protocol, runtime_checkable
 
@@ -33,9 +34,9 @@ from repro.core.factors import FactorSet, capture_factors
 from repro.core.mpi_ops import make_composite_op
 from repro.core.opexpr import parse_opexpr
 from repro.core.runtime_meter import JaxEpochContext, MeterConfig
-from repro.core.simnet import SimNet
+from repro.core.simnet import ClockParams, SimNet
 from repro.core.sync import make_sync
-from repro.core.window import WindowRun, run_windowed
+from repro.core.window import WindowRun, resolve_engine, run_windowed
 
 __all__ = [
     "MeasurementBackend",
@@ -144,10 +145,21 @@ class _SimEpoch:
 
     def __init__(self, backend: "SimBackend", epoch: int):
         self.backend = backend
-        self.net = SimNet(backend.p, seed=backend.seed0 + 1000 * epoch)
+        self.net = SimNet(
+            backend.p,
+            clocks=ClockParams(**backend.clock_kw) if backend.clock_kw
+            else None,
+            seed=backend.seed0 + 1000 * epoch)
         sync_kw = _filter_sync_kw(backend.sync_name, backend.sync_kw)
         self.sync = make_sync(backend.sync_name,
                               **sync_kw).synchronize(self.net)
+        # Resolve once per epoch: what will actually run. A substitution
+        # (jax requested but unusable) is never silent — it is warned once
+        # per campaign and recorded per record (`meta["engine"]`).
+        self.engine, self.engine_note = resolve_engine(backend.engine,
+                                                       self.net)
+        if self.engine_note is not None:
+            backend._warn_fallback(self.engine_note)
         self._ops: dict[str, Any] = {}
 
     def op(self, name: str):
@@ -195,12 +207,25 @@ class SimBackend:
     sync_kw: dict = field(default_factory=lambda: dict(_SYNC_KW))
     win_size: float = 400e-6
     engine: str = "auto"
+    clock_kw: dict = field(default_factory=dict)
     buffer_policy: str = "warm"        # warm | cold
     epoch_isolation: str = "process"   # process | none
     dtype: str = "float32"             # label-only (null factor by design)
     name: str = "sim"
     _shared_epoch: Any = field(default=None, init=False, repr=False,
                                compare=False)
+    _fallback_warned: set = field(default_factory=set, init=False,
+                                  repr=False, compare=False)
+
+    def _warn_fallback(self, note: str) -> None:
+        """Warn once per campaign (per distinct reason) when the requested
+        engine is substituted — the audit trail for the historic bug where
+        ``engine="auto"`` silently dropped to the scalar path."""
+        if note in self._fallback_warned:
+            return
+        self._fallback_warned.add(note)
+        warnings.warn(f"SimBackend(engine={self.engine!r}): {note}",
+                      RuntimeWarning, stacklevel=3)
 
     def make_epoch(self, epoch: int) -> _SimEpoch:
         if self.buffer_policy not in ("warm", "cold"):
@@ -221,7 +246,7 @@ class SimBackend:
     def measure(self, ctx: _SimEpoch, case: TestCase, nrep: int) -> np.ndarray:
         op = ctx.op(case.op)
         runs = [run_windowed(ctx.net, ctx.sync, op, case.msize, nrep,
-                             win_size=self.win_size, engine=self.engine)]
+                             win_size=self.win_size, engine=ctx.engine)]
         # top up the window discards (bounded: at most 2 extra chunks)
         for _ in range(2):
             missing = nrep - sum(r.valid_times.size for r in runs)
@@ -229,12 +254,20 @@ class SimBackend:
                 break
             runs.append(run_windowed(ctx.net, ctx.sync, op, case.msize,
                                      missing, win_size=self.win_size,
-                                     engine=self.engine))
+                                     engine=ctx.engine))
         wr = WindowRun.concat(runs)
         # Degenerate case (window far too small): nothing valid anywhere.
         # Return at most nrep raw observations rather than every top-up
         # draw, so adaptive stopping's sample-size accounting stays honest.
         return wr.valid_times if wr.valid_times.size else wr.times[:nrep]
+
+    def record_meta(self, ctx: _SimEpoch, case: TestCase) -> dict:
+        """Per-record provenance: the engine that *actually ran* (which can
+        differ from the configured one — see :func:`resolve_engine`)."""
+        meta = {"engine": ctx.engine}
+        if ctx.engine_note is not None:
+            meta["engine_fallback"] = ctx.engine_note
+        return meta
 
     def factors(self, design: ExperimentDesign) -> FactorSet:
         return capture_factors(
@@ -252,6 +285,7 @@ class SimBackend:
                        (op, tuple(sorted(kw.items())))
                        for op, kw in self.per_op_kw.items()))),
                    ("sync_kw", tuple(sorted(self.sync_kw.items()))),
+                   ("clock_kw", tuple(sorted(self.clock_kw.items()))),
                    ("engine", self.engine)),
             **_design_factor_kw(design),
         )

@@ -128,6 +128,12 @@ class Campaign:
                 # (FactorSet excludes it), so a merged multi-host store
                 # needs it stamped on every record to stay auditable.
                 meta.setdefault("host", platform.node())
+                # Backend-provided provenance (e.g. which window engine
+                # actually ran after fallback resolution).
+                record_meta = getattr(backend, "record_meta", None)
+                if record_meta is not None:
+                    for k, v in record_meta(ctx, case).items():
+                        meta.setdefault(k, v)
                 rec = MeasurementRecord(case=case, epoch=epoch, times=times,
                                         meta=meta)
                 if store is not None:

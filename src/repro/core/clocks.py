@@ -28,6 +28,7 @@ about Eq. (1) in the paper).
 from __future__ import annotations
 
 import time
+import zlib
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -37,10 +38,39 @@ __all__ = [
     "PerfClock",
     "SimClock",
     "AdjustedClock",
+    "DriftPath",
     "LinearModel",
     "IDENTITY_MODEL",
+    "derive_stream",
     "linear_fit",
 ]
+
+
+def derive_stream(parent, *keys) -> np.random.Generator:
+    """Derive an independent child RNG stream from ``parent``.
+
+    ``parent`` is either an integer seed or a live
+    :class:`numpy.random.Generator` — in the latter case exactly one draw
+    is consumed from it, preserving the stream position of the historic
+    inline derivations (``default_rng(rng.integers(2**31))``). ``keys``
+    namespace sibling streams deterministically; strings are hashed with
+    CRC-32 rather than ``hash()`` (which is salted per process), so every
+    engine port — scalar, batch, JAX — derives the *same* stream for the
+    same logical purpose.
+    """
+    if isinstance(parent, np.random.Generator):
+        root = int(parent.integers(2**31))
+    else:
+        root = int(parent)
+    if not keys:
+        return np.random.default_rng(root)
+    material = [root & 0xFFFFFFFFFFFFFFFF]
+    for k in keys:
+        if isinstance(k, str):
+            material.append(zlib.crc32(k.encode("utf-8")) & 0xFFFFFFFF)
+        else:
+            material.append(int(k) & 0xFFFFFFFFFFFFFFFF)
+    return np.random.default_rng(np.random.SeedSequence(material))
 
 
 class Clock:
@@ -67,6 +97,69 @@ class PerfClock(Clock):
 
 
 @dataclass
+class DriftPath:
+    """Pre-sampled cumulative random-walk drift on a fixed true-time grid.
+
+    The lazy walk of :class:`SimClock` samples an increment at every clock
+    read, which forces a per-observation scalar loop. A ``DriftPath``
+    instead materializes the walk on nodes ``t_k = anchor + k * dt`` and
+    linearly interpolates between them — the same Gaussian process at the
+    nodes, a vectorizable piecewise-affine function everywhere else. That
+    piecewise affinity is what makes batched local↔global deadline
+    inversion possible (``SimClock.true_at_local``): locate the bracketing
+    segment by binary search, then solve the in-segment affine map.
+
+    Node values depend only on the derived stream and the node count, not
+    on query order, so scalar and batched engines reading the same path see
+    bit-identical walks.
+    """
+
+    sigma: float
+    dt: float
+    rng: np.random.Generator = field(repr=False)
+    t: np.ndarray = field(repr=False)    # node true times, fixed spacing dt
+    x: np.ndarray = field(repr=False)    # node walk values [s]
+
+    @classmethod
+    def start(cls, sigma: float, dt: float, anchor_t: float, anchor_x: float,
+              rng: np.random.Generator) -> "DriftPath":
+        return cls(sigma=float(sigma), dt=float(dt), rng=rng,
+                   t=np.array([anchor_t], dtype=np.float64),
+                   x=np.array([anchor_x], dtype=np.float64))
+
+    @property
+    def version(self) -> int:
+        """Grows monotonically with the path; cheap cache-invalidation key."""
+        return self.t.size
+
+    def ensure(self, t_max: float) -> None:
+        """Extend the path so its last node is at or past ``t_max``."""
+        need = int(np.ceil((float(t_max) - float(self.t[-1])) / self.dt))
+        if need <= 0:
+            return
+        n = max(need, 256)
+        if self.sigma > 0.0:
+            steps = self.rng.normal(0.0, self.sigma * np.sqrt(self.dt), size=n)
+            # Keep per-segment local time strictly increasing even if a step
+            # outruns the clock's own rate (needs sigma ~ sqrt(dt)/2 — never
+            # at physical rw_sigma ~ 1e-7, but the inversion must not hang).
+            np.clip(steps, -0.45 * self.dt, 0.45 * self.dt, out=steps)
+        else:
+            steps = np.zeros(n)
+        t_new = self.t[-1] + self.dt * np.arange(1, n + 1)
+        self.t = np.concatenate((self.t, t_new))
+        self.x = np.concatenate((self.x, self.x[-1] + np.cumsum(steps)))
+
+    def value(self, t_true):
+        """Walk value at ``t_true`` (scalar or array), extending on demand."""
+        arr = np.asarray(t_true, dtype=np.float64)
+        if arr.size:
+            self.ensure(float(np.max(arr)))
+        out = np.interp(arr, self.t, self.x)
+        return out if arr.ndim else float(out)
+
+
+@dataclass
 class SimClock(Clock):
     """Simulated hardware clock with offset, skew and optional noise.
 
@@ -77,6 +170,13 @@ class SimClock(Clock):
     mis-estimated frequency multiplies elapsed local time by
     ``(1 + scale_error)``; the paper measures ~4.3e-6 relative error, i.e.
     an extra microsecond of drift per second.
+
+    The walk has two sampling modes. *Lazy* (the default): an increment is
+    drawn at every forward read — inherently scalar. *Path*: after
+    :meth:`drift_path` activates a :class:`DriftPath`, reads interpolate
+    the pre-sampled walk and accept arrays, and :meth:`true_at_local`
+    inverts the clock exactly — what the batched window engine
+    (``engine="batch_rw"``) is built on.
     """
 
     offset: float = 0.0
@@ -87,6 +187,8 @@ class SimClock(Clock):
     _rng: np.random.Generator = field(init=False, repr=False)
     _rw_t: float = field(default=0.0, init=False, repr=False)
     _rw_x: float = field(default=0.0, init=False, repr=False)
+    _path: "DriftPath | None" = field(default=None, init=False, repr=False)
+    _raw_nodes_cache: tuple = field(default=None, init=False, repr=False)
 
     def __post_init__(self) -> None:
         self._rng = np.random.default_rng(self.seed)
@@ -100,9 +202,32 @@ class SimClock(Clock):
             self._rw_t = t_true
         return self._rw_x
 
-    def read(self, t_true: float) -> float:
-        raw = self.offset + (1.0 + self.skew) * t_true + self._random_walk(t_true)
-        return raw * (1.0 + self.scale_error)
+    def drift_path(self, dt: float) -> DriftPath:
+        """Switch the walk to path mode (idempotent; returns the path).
+
+        The path anchors at the walk's current state and samples forward on
+        a ``dt`` grid from a stream derived from the clock seed — so two
+        identically-seeded clocks frozen at the same state grow identical
+        paths regardless of which engine queries them first.
+        """
+        if self._path is None:
+            self._path = DriftPath.start(
+                self.rw_sigma, max(float(dt), 1e-9), self._rw_t, self._rw_x,
+                derive_stream(self.seed, "drift-path"))
+        return self._path
+
+    def read(self, t_true):
+        """Local clock at true time ``t_true``.
+
+        Scalar in lazy mode; accepts arrays once a drift path is active.
+        """
+        if self._path is not None:
+            rw = self._path.value(t_true)
+        else:
+            rw = self._random_walk(t_true)
+        raw = self.offset + (1.0 + self.skew) * t_true + rw
+        out = raw * (1.0 + self.scale_error)
+        return out if np.ndim(out) else float(out)
 
     def read_affine(self, t_true):
         """Affine part of :meth:`read` (no random-walk term); accepts
@@ -111,6 +236,46 @@ class SimClock(Clock):
         batches — identical to :meth:`read` whenever ``rw_sigma == 0``.
         """
         return (self.offset + (1.0 + self.skew) * t_true) * (1.0 + self.scale_error)
+
+    def _raw_nodes(self) -> np.ndarray:
+        """Node-wise raw local readings ``offset + (1+skew) t_k + x_k``
+        of the drift path, cached until the path grows."""
+        path = self._path
+        cache = self._raw_nodes_cache
+        if cache is None or cache[0] != path.version:
+            f = self.offset + (1.0 + self.skew) * path.t + path.x
+            self._raw_nodes_cache = (path.version, f)
+        return self._raw_nodes_cache[1]
+
+    def true_at_local(self, local):
+        """Invert :meth:`read`: local reading → true time (scalar or array).
+
+        In path mode the inversion is exact: raw local readings are
+        strictly increasing node-to-node (``DriftPath.ensure`` clips steps
+        below the clock rate), so bracket the target by binary search over
+        the node readings and solve the in-segment affine map. In lazy mode
+        the walk is frozen at its last sampled value — the future cannot be
+        anticipated — matching the scalar engine's historical busy-wait
+        semantics.
+        """
+        scalar = np.ndim(local) == 0
+        raw = np.asarray(local, dtype=np.float64) / (1.0 + self.scale_error)
+        if self._path is None:
+            out = (raw - self.offset - self._rw_x) / (1.0 + self.skew)
+            return float(out) if scalar else out
+        path = self._path
+        rate = 1.0 + self.skew
+        raw_max = float(np.max(raw)) if raw.size else -np.inf
+        path.ensure((raw_max - self.offset) / rate + 2.0 * path.dt)
+        f = self._raw_nodes()
+        while f[-1] < raw_max:      # drift pushed the root past the horizon
+            path.ensure(path.t[-1] + 16.0 * path.dt)
+            f = self._raw_nodes()
+        idx = np.clip(np.searchsorted(f, raw, side="right") - 1,
+                      0, f.size - 2)
+        seg_slope = rate + (path.x[idx + 1] - path.x[idx]) / path.dt
+        out = path.t[idx] + (raw - f[idx]) / seg_slope
+        return float(out) if scalar else out
 
     def true_offset_to(self, other: "SimClock", t_true: float) -> float:
         """Ground-truth offset ``self - other`` at true time ``t_true``."""

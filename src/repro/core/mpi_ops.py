@@ -37,6 +37,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .clocks import derive_stream
 from .simnet import SimNet
 
 __all__ = [
@@ -141,7 +142,11 @@ class SimCollective:
     def _bias_for(self, net: SimNet) -> float:
         bias = self._epoch_bias.get(net)
         if bias is None:
-            rng = np.random.default_rng(net.rng.integers(2**31))
+            # derive_stream(Generator) consumes one draw from net.rng —
+            # bit-identical to the historic inline derivation here, and the
+            # same helper the clock drift paths and the JAX engine use, so
+            # engine ports cannot diverge on stream derivation.
+            rng = derive_stream(net.rng)
             bias = float(np.exp(rng.normal(0.0, self.epoch_bias_sigma)))
             self._epoch_bias[net] = bias
         return bias

@@ -107,10 +107,21 @@ class SimNet:
         return float(self.t[r])
 
     def true_time_at_local(self, r: int, local: float) -> float:
-        """Invert host ``r``'s clock (simulator bookkeeping for waits)."""
-        c = self.clocks[r]
-        raw = local / (1.0 + c.scale_error)
-        return (raw - c.offset - c._rw_x) / (1.0 + c.skew)
+        """Invert host ``r``'s clock (simulator bookkeeping for waits).
+
+        Exact for affine clocks and for random-walk clocks in drift-path
+        mode; for a lazy walk the inversion freezes the walk at its last
+        sampled value (see :meth:`SimClock.true_at_local`).
+        """
+        return self.clocks[r].true_at_local(local)
+
+    def freeze_drift_paths(self, dt: float, ranks: list[int] | None = None):
+        """Switch the given clocks' random walks to pre-sampled drift-path
+        mode (node spacing ``dt``); idempotent. The batched random-walk
+        window engine does this implicitly — tests freeze both nets up
+        front so scalar and batch runs traverse identical walks."""
+        ranks = range(self.p) if ranks is None else ranks
+        return [self.clocks[r].drift_path(dt) for r in ranks]
 
     def advance(self, r: int, dt: float) -> None:
         """Host ``r`` computes locally for ``dt`` true seconds."""

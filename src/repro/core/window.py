@@ -14,23 +14,35 @@ Measurements with either flag set on any rank are *invalid* and discarded
 (Figs. 21-22 study the trade-off between window size and the fraction of
 discarded measurements).
 
-Two engines compute the same campaign:
+Four engines compute the same campaign:
 
   * ``engine="scalar"`` — the semantic reference: a per-observation,
     per-rank Python loop of busy-waits and scalar clock reads;
-  * ``engine="batch"`` (default where applicable) — both the hardware
-    clock (:class:`~repro.core.clocks.SimClock` with ``rw_sigma == 0``)
-    and the learned sync model are affine, so every local↔global
-    conversion — deadlines, START_LATE and TOOK_TOO_LONG flags, global
-    start/end estimates — is evaluated in closed form over all ``nrep``
-    windows at once, on top of
-    :meth:`~repro.core.mpi_ops.SimCollective.execute_batch`.
+  * ``engine="batch"`` — both the hardware clock
+    (:class:`~repro.core.clocks.SimClock` with ``rw_sigma == 0``) and the
+    learned sync model are affine, so every local↔global conversion —
+    deadlines, START_LATE and TOOK_TOO_LONG flags, global start/end
+    estimates — is evaluated in closed form over all ``nrep`` windows at
+    once, on top of
+    :meth:`~repro.core.mpi_ops.SimCollective.execute_batch`;
+  * ``engine="batch_rw"`` — the same vectorized scheduling for
+    *random-walk* clocks: the walk is pre-sampled on a window-spaced grid
+    (:class:`~repro.core.clocks.DriftPath`), which makes the local clock a
+    monotone piecewise-affine map of true time, so the deadline inversion
+    becomes a batched binary search over path nodes plus an in-segment
+    affine solve;
+  * ``engine="jax"`` — the accelerator-resident port
+    (:mod:`repro.simjax`): duration sampling and the cross-call entry
+    recurrence jit-compiled over the whole ``(nrep, p)`` grid. Affine
+    clocks only; raises :class:`~repro.simjax.SimJaxUnavailable`
+    otherwise (callers that want a soft fallback use
+    :func:`resolve_engine`).
 
-``engine="auto"`` picks the batch engine whenever all participating
-clocks are drift-affine (no random-walk component) and falls back to the
-scalar reference otherwise.  The two engines are bit-identical given
-identical noise samples and statistically indistinguishable under a live
-RNG (``tests/test_batch_equivalence.py``).
+``engine="auto"`` picks ``batch`` for drift-affine clocks and
+``batch_rw`` for random-walk clocks — every stock clock model runs a
+vectorized path (the historic silent scalar fallback is retired). The
+engines are bit-identical given identical noise samples and statistically
+indistinguishable under a live RNG (``tests/test_batch_equivalence.py``).
 """
 
 from __future__ import annotations
@@ -43,7 +55,10 @@ from .mpi_ops import SimCollective
 from .simnet import SimNet
 from .sync.base import SyncResult
 
-__all__ = ["WindowRun", "run_windowed", "run_windowed_scalar"]
+__all__ = ["WindowRun", "resolve_engine", "run_windowed",
+           "run_windowed_rw_batch", "run_windowed_scalar"]
+
+ENGINES = ("auto", "batch", "batch_rw", "scalar", "jax")
 
 START_LATE = 1
 TOOK_TOO_LONG = 2
@@ -98,6 +113,34 @@ def _clocks_affine(net: SimNet, ranks: list[int]) -> bool:
     return all(net.clocks[r].rw_sigma <= 0.0 for r in ranks)
 
 
+def resolve_engine(engine: str, net: SimNet,
+                   ranks: list[int] | None = None) -> tuple[str, str | None]:
+    """Map a requested engine to the one that will actually run.
+
+    Returns ``(resolved, fallback_note)``; ``fallback_note`` is ``None``
+    unless the request cannot be honored and a slower-but-equivalent engine
+    is substituted (``jax`` on random-walk clocks or without an importable
+    jax). ``run_windowed`` itself never falls back silently — callers that
+    want the soft behavior (``SimBackend``) resolve here first, record the
+    resolved engine in each record's meta, and warn once per campaign.
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; use "
+                         + "|".join(ENGINES))
+    ranks = list(range(net.p)) if ranks is None else ranks
+    affine = _clocks_affine(net, ranks)
+    if engine == "auto":
+        return ("batch" if affine else "batch_rw"), None
+    if engine == "jax":
+        if not affine:
+            return "batch_rw", ("engine='jax' supports affine clocks only; "
+                                "resolved to 'batch_rw'")
+        from repro.simjax import have_jax
+        if not have_jax():
+            return "batch", "jax is not importable; resolved to 'batch'"
+    return engine, None
+
+
 def run_windowed(
     net: SimNet,
     sync: SyncResult,
@@ -113,20 +156,29 @@ def run_windowed(
     Completion time per observation follows §3.2.2 (global times):
     ``max_r global(end_r) - min_r global(start_r)``.
 
-    ``engine`` is ``"auto"`` (batch when all clocks are affine),
-    ``"batch"`` or ``"scalar"``.
+    ``engine`` is ``"auto"`` (``batch`` for affine clocks, ``batch_rw``
+    for random-walk clocks), ``"batch"``, ``"batch_rw"``, ``"jax"`` or
+    ``"scalar"``. Explicit engines are strict: ``batch`` and ``jax``
+    raise on random-walk clocks rather than silently degrading.
     """
     ranks = list(range(net.p)) if ranks is None else ranks
     if engine == "auto":
-        engine = "batch" if _clocks_affine(net, ranks) else "scalar"
+        engine = "batch" if _clocks_affine(net, ranks) else "batch_rw"
+    elif engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; use "
+                         + "|".join(ENGINES))
     if engine == "scalar":
         return run_windowed_scalar(net, sync, op, msize, nrep, win_size, ranks)
-    if engine != "batch":
-        raise ValueError(f"unknown engine {engine!r}; use auto|batch|scalar")
+    if engine == "batch_rw":
+        return run_windowed_rw_batch(net, sync, op, msize, nrep, win_size,
+                                     ranks)
+    if engine == "jax":
+        from repro.simjax import run_windowed_jax
+        return run_windowed_jax(net, sync, op, msize, nrep, win_size, ranks)
     if not _clocks_affine(net, ranks):
         raise ValueError(
             "engine='batch' requires affine clocks (rw_sigma == 0); "
-            "use engine='scalar' for random-walk clocks")
+            "use engine='batch_rw' (or 'auto') for random-walk clocks")
     p = len(ranks)
 
     # Root picks a start time in the (global-clock) future and broadcasts it
@@ -149,6 +201,78 @@ def run_windowed(
     prev_end = np.vstack((t0[None, :], ex.end_true[:-1]))
     # wait_until_local() reports START_LATE when the deadline is <= the
     # rank's current time (i.e. <= its previous finish).
+    late = deadline_true <= prev_end
+
+    sg = np.empty((nrep, p))
+    eg = np.empty((nrep, p))
+    for i, r in enumerate(ranks):
+        clk, init = net.clocks[r], sync.initial_times[r]
+        model = sync.models[r]
+        sg[:, i] = model.normalize(clk.read(ex.start_true[:, i]) - init)
+        eg[:, i] = model.normalize(clk.read(ex.end_true[:, i]) - init)
+    took = eg > (targets + win_size)[:, None]
+
+    errors = np.zeros(nrep, dtype=np.int64)
+    errors[late.any(axis=1)] |= START_LATE
+    errors[took.any(axis=1)] |= TOOK_TOO_LONG
+    times = eg.max(axis=1) - sg.min(axis=1)
+
+    return WindowRun(
+        times=times, errors=errors,
+        start_global_est=sg, end_global_est=eg,
+        start_true=ex.start_true, end_true=ex.end_true,
+    )
+
+
+def run_windowed_rw_batch(
+    net: SimNet,
+    sync: SyncResult,
+    op: SimCollective,
+    msize: int,
+    nrep: int,
+    win_size: float,
+    ranks: list[int] | None = None,
+) -> WindowRun:
+    """Vectorized windowed engine for random-walk clocks.
+
+    The only thing separating a random-walk clock from an affine one is
+    that local↔global conversion has no single closed form. But once the
+    walk is pre-sampled on a fixed grid
+    (:meth:`~repro.core.clocks.SimClock.drift_path`), the local clock is a
+    *monotone piecewise-affine* map of true time: deadline inversion is a
+    batched binary search over the path nodes plus an in-segment affine
+    solve, and forward reads are vectorized interpolation. Everything else
+    — the cross-call entry recurrence, flags, global estimates — is the
+    affine batch engine unchanged.
+
+    Activating the path changes how the walk's future is sampled
+    (grid nodes + linear interpolation instead of an increment per read):
+    statistically equivalent to the lazy walk, and *bit-identical* to the
+    scalar engine run against the same frozen paths
+    (``SimNet.freeze_drift_paths``; see ``tests/test_batch_equivalence.py``).
+    Also valid for affine clocks, where the path is identically zero.
+    """
+    ranks = list(range(net.p)) if ranks is None else ranks
+    p = len(ranks)
+    # Pre-sample every participating walk on a window-spaced grid *before*
+    # the first clock read, so all conversions below — and any later scalar
+    # read of the same net — interpolate the same path.
+    for r in ranks:
+        net.clocks[r].drift_path(win_size)
+
+    g_now = max(sync.global_time(net, r) for r in ranks)
+    start_time = g_now + win_size
+    targets = start_time + win_size * np.arange(nrep)
+
+    deadline_true = np.empty((nrep, p))
+    for i, r in enumerate(ranks):
+        deadline_local = sync.models[r].denormalize(targets) + sync.initial_times[r]
+        deadline_true[:, i] = net.clocks[r].true_at_local(deadline_local)
+
+    t0 = net.t[ranks].copy()
+    ex = op.execute_batch(net, msize, nrep, ranks,
+                          min_start_true=deadline_true)
+    prev_end = np.vstack((t0[None, :], ex.end_true[:-1]))
     late = deadline_true <= prev_end
 
     sg = np.empty((nrep, p))

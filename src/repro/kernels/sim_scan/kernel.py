@@ -1,0 +1,135 @@
+"""Pallas kernel: fused AR(1) scan + mixture for duration sampling.
+
+Same shape as the SSD kernel's TPU adaptation: a 1D sequence is cut into
+chunks, the grid iterates chunks *sequentially*, and the inter-chunk AR(1)
+carry lives in scratch across iterations. Within a chunk the recurrence is
+the exponential-decay closed form ``s_j = a^j * cumsum(eps_j / a^j) +
+carry * a^{j+1}`` (no ``associative_scan`` inside Pallas), and the
+tail/spike mixture is applied in the same pass, so noise never round-trips
+through HBM between the scan and the mixture.
+
+The chunk length bounds the ``a^{-j}`` rescaling: with ``l = 128``,
+``|coeff| >= 0.005`` stays far from float64 overflow. Below that the AR
+memory is negligible and the kernel switches to the first-order form
+``s_i ~= eps_i + coeff * s_{i-1}`` (exact for ``coeff == 0``). Operating
+range ``|coeff| < 1`` — every stock op qualifies (default 0.35).
+
+Validated against ``ref.sim_durations_ref`` in interpret mode
+(tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+
+    def _compiler_params(dims):
+        try:
+            return pltpu.CompilerParams(dimension_semantics=dims)
+        except Exception:
+            return pltpu.TPUCompilerParams(dimension_semantics=dims)
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+__all__ = ["sim_durations_scan"]
+
+_CHUNK = 128
+_A_MIN = 0.005  # below this, a^-(l-1) would overflow; use first-order form
+
+
+def _kernel(eps_ref, ut_ref, um_ref, us_ref, prm_ref, t_ref, s_ref, carry,
+            *, l):
+    ic = pl.program_id(0)
+    prm = prm_ref[0]            # [state, t0, coeff, tail_p, tail_s, spk_p, spk_s]
+    a = prm[2]
+
+    @pl.when(ic == 0)
+    def _init():
+        carry[0, 0] = prm[0]
+
+    c = carry[0, 0]
+    eps = eps_ref[...]                                   # (1, l)
+    small = jnp.abs(a) < _A_MIN
+    a_div = jnp.where(small, 1.0, a)
+    j = lax.broadcasted_iota(jnp.int32, (1, l), 1).astype(eps.dtype)
+    decay = a_div ** j
+    s_cf = decay * jnp.cumsum(eps / decay, axis=1) + c * a_div * decay
+    prev = jnp.concatenate([jnp.full((1, 1), c, eps.dtype), eps[:, :-1]],
+                           axis=1)
+    s = jnp.where(small, eps + a * prev, s_cf)
+    carry[0, 0] = s[0, l - 1]
+
+    t = prm[1] * jnp.exp(s)
+    mag = 1.0 + prm[4] * (0.7 + 0.6 * um_ref[...])
+    t = jnp.where(ut_ref[...] < prm[3], t * mag, t)
+    t = jnp.where(us_ref[...] < prm[5], t * prm[6], t)
+    t_ref[...] = t
+    s_ref[...] = s
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sim_durations_scan(eps, u_tail, u_mag, u_spike, *, coeff, state, t0,
+                       tail_prob, tail_shift, spike_prob, spike_scale,
+                       interpret=None):
+    """Drop-in for :func:`ref.sim_durations_ref`; returns ``(durations, s)``.
+
+    1D inputs of any length — padded to a chunk multiple internally (end
+    padding, so the leading ``n`` states are unaffected by it).
+    """
+    interpret = _auto_interpret(interpret)
+    if _VMEM is None:  # no pallas scratch support: fall back to the oracle
+        from .ref import sim_durations_ref
+        return sim_durations_ref(
+            eps, u_tail, u_mag, u_spike, coeff=coeff, state=state, t0=t0,
+            tail_prob=tail_prob, tail_shift=tail_shift,
+            spike_prob=spike_prob, spike_scale=spike_scale)
+
+    n = eps.shape[0]
+    l = min(_CHUNK, max(8, n))
+    nc = -(-n // l)
+    pad = nc * l - n
+    dt = eps.dtype
+
+    def _blk(x, fill):
+        x = jnp.pad(x, (0, pad), constant_values=fill)
+        return x.reshape(nc, l)
+
+    prm = jnp.stack([jnp.asarray(v, dt) for v in
+                     (state, t0, coeff, tail_prob, tail_shift, spike_prob,
+                      spike_scale, jnp.zeros((), dt))]).reshape(1, 8)
+
+    kernel = functools.partial(_kernel, l=l)
+    kwargs = {"scratch_shapes": [_VMEM((1, 1), dt)]}
+    if not interpret:
+        kwargs["compiler_params"] = _compiler_params(("arbitrary",))
+
+    row = pl.BlockSpec((1, l), lambda ic: (ic, 0))
+    t, s = pl.pallas_call(
+        kernel,
+        grid=(nc,),
+        in_specs=[row, row, row,
+                  row, pl.BlockSpec((1, 8), lambda ic: (0, 0))],
+        out_specs=[row, row],
+        out_shape=[jax.ShapeDtypeStruct((nc, l), dt),
+                   jax.ShapeDtypeStruct((nc, l), dt)],
+        interpret=interpret,
+        **kwargs,
+    )(_blk(eps, 0.0), _blk(u_tail, 1.0), _blk(u_mag, 0.0),
+      _blk(u_spike, 1.0), prm)
+    return t.reshape(-1)[:n], s.reshape(-1)[:n]

@@ -1,0 +1,21 @@
+"""Accelerator-resident (JAX) port of the simulation hot path.
+
+``run_windowed_jax`` jit-compiles the whole windowed-measurement grid —
+AR(1)-lognormal duration sampling with the bimodal-tail/spike/imbalance
+mixture of :class:`~repro.core.mpi_ops.SimCollective`, the cross-call
+entry recurrence (a prefix-sum + running-max, mapped to
+``jax.lax.associative_scan`` / ``lax.cummax``), and every local↔global
+clock conversion — over the full ``(nrep, p)`` array at once. It is
+exposed as ``run_windowed(..., engine="jax")`` and
+``SimBackend(engine="jax")`` with zero call-site changes.
+
+The port is float64 end to end (via ``jax.experimental.enable_x64``), so
+its absolute-time arithmetic carries the same resolution as the numpy
+engine; draws use JAX's counter-based PRNG, so — like PR 1's batching —
+campaigns are statistically, not bit-wise, identical to the numpy engines
+(``tests/test_batch_equivalence.py``).
+"""
+
+from .engine import SimJaxUnavailable, have_jax, run_windowed_jax
+
+__all__ = ["SimJaxUnavailable", "have_jax", "run_windowed_jax"]

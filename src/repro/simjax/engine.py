@@ -1,0 +1,214 @@
+"""JIT-compiled windowed-measurement engine (the ``engine="jax"`` path).
+
+One measurement call lowers to two jitted programs:
+
+  * ``sample`` — per cost-model term: draw the AR(1) innovations and
+    mixture uniforms, run the linear recurrence as a
+    ``lax.associative_scan`` over affine maps ``(a, b)`` (composition
+    ``(a1, b1) ∘ (a2, b2) = (a1 a2, b1 a2 + b2)`` is associative, so the
+    scan is exact, not an approximation), and apply the
+    lognormal/bimodal-tail/spike mixture — the jnp reference of the
+    optional fused Pallas kernel in :mod:`repro.kernels.sim_scan`;
+  * ``window`` — deadline conversion, the cross-call entry recurrence
+    ``all_in_i = C_i + max(max_r t0_r, cummax_i(dmax - C))``, per-rank
+    finish imbalance, START_LATE / TOOK_TOO_LONG flags and global-time
+    estimates, over the whole ``(nrep, p)`` grid.
+
+Host-side work per call is O(p): clock/sync model coefficients, per-term
+epoch biases (through the same :func:`~repro.core.clocks.derive_stream`
+helper as the numpy engines) and the AR(1) carry in/out. Small ``nrep``
+are padded to a power-of-two bucket so adaptive campaigns hit a handful of
+compiled shapes instead of recompiling per top-up; padded windows are
+computed and discarded (the entry recurrence is forward-only, so the first
+``nrep`` windows are unaffected).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import numpy as np
+
+from repro.core.window import START_LATE, TOOK_TOO_LONG, WindowRun
+
+__all__ = ["SimJaxUnavailable", "have_jax", "run_windowed_jax"]
+
+
+class SimJaxUnavailable(RuntimeError):
+    """The jax engine cannot run this request (no jax, or non-affine
+    clocks). ``resolve_engine`` maps this to a numpy-engine fallback."""
+
+
+@functools.lru_cache(maxsize=1)
+def have_jax() -> bool:
+    try:
+        import jax  # noqa: F401
+        return True
+    except Exception:
+        return False
+
+
+def _use_pallas_default() -> bool:
+    return os.environ.get("REPRO_SIMJAX_PALLAS", "") not in ("", "0")
+
+
+def _bucket(nrep: int) -> int:
+    """Compiled-shape bucket: next power of two (>= 32) below 1024, exact
+    above — campaigns reuse a few small shapes, benchmarks compile once."""
+    if nrep >= 1024:
+        return nrep
+    n = 32
+    while n < nrep:
+        n *= 2
+    return n
+
+
+@functools.lru_cache(maxsize=1)
+def _jitted():
+    """Build (once) the jitted sample/window cores. Raises
+    :class:`SimJaxUnavailable` when jax is missing."""
+    if not have_jax():
+        raise SimJaxUnavailable("engine='jax' requires jax, which is not "
+                                "importable in this environment")
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    def sample(key, t0_op, ar_state, noise_sigma, autocorr, tail_prob,
+               tail_shift, spike_prob, spike_scale, *, n, use_pallas):
+        k_eps, k_tail, k_mag, k_spike = jax.random.split(key, 4)
+        eps = noise_sigma * jax.random.normal(k_eps, (n,), jnp.float64)
+        u_tail = jax.random.uniform(k_tail, (n,), jnp.float64)
+        u_mag = jax.random.uniform(k_mag, (n,), jnp.float64)
+        u_spike = jax.random.uniform(k_spike, (n,), jnp.float64)
+        if use_pallas:
+            from repro.kernels.sim_scan.kernel import sim_durations_scan as fn
+        else:
+            from repro.kernels.sim_scan.ref import sim_durations_ref as fn
+        return fn(eps, u_tail, u_mag, u_spike, coeff=autocorr,
+                  state=ar_state, t0=t0_op, tail_prob=tail_prob,
+                  tail_shift=tail_shift, spike_prob=spike_prob,
+                  spike_scale=spike_scale)
+
+    def window(durations, key, t0, off, skew, scale, slope, intercept,
+               init_t, rank_imbalance, start_time, win_size):
+        n = durations.shape[0]
+        p = t0.shape[0]
+        targets = start_time + win_size * jnp.arange(n, dtype=jnp.float64)
+        # deadline: sync-model denormalize, then the affine clock inverse
+        dl_local = (targets[:, None] + intercept[None, :]) \
+            / (1.0 - slope[None, :]) + init_t[None, :]
+        raw = dl_local / (1.0 + scale[None, :])
+        deadline_true = (raw - off[None, :]) / (1.0 + skew[None, :])
+        # f32 draw, f64 math: threefry bit generation is the hot spot and a
+        # multiplicative spread factor needs ~1e-2 resolution, not 1e-16
+        imb = rank_imbalance * jax.random.normal(
+            key, (n, p), jnp.float32).astype(jnp.float64)
+        span = durations[:, None] * jnp.maximum(0.25, 1.0 + imb)
+        e = span.max(axis=1)
+        dmax = deadline_true.max(axis=1)
+        C = jnp.concatenate([jnp.zeros((1,), e.dtype), jnp.cumsum(e[:-1])])
+        all_in = C + jnp.maximum(jnp.max(t0), lax.cummax(dmax - C))
+        end = all_in[:, None] + span
+        prev_end = jnp.concatenate([t0[None, :], end[:-1]], axis=0)
+        start = jnp.maximum(deadline_true, prev_end)
+        late = (deadline_true <= prev_end).any(axis=1)
+
+        def to_global(t_true):
+            local = (off[None, :] + (1.0 + skew[None, :]) * t_true) \
+                * (1.0 + scale[None, :])
+            adj = local - init_t[None, :]
+            return adj - (adj * slope[None, :] + intercept[None, :])
+
+        sg = to_global(start)
+        eg = to_global(end)
+        took = (eg > (targets + win_size)[:, None]).any(axis=1)
+        errors = jnp.where(late, START_LATE, 0) \
+            | jnp.where(took, TOOK_TOO_LONG, 0)
+        times = eg.max(axis=1) - sg.min(axis=1)
+        return times, errors, sg, eg, start, end
+
+    return (jax,
+            jax.jit(sample, static_argnames=("n", "use_pallas")),
+            jax.jit(window))
+
+
+def _terms(op, p: int, msize: int):
+    """Flatten an op into ``(term, term_p, term_msize)`` triples —
+    composites sample each constituent at its own size/count and sum,
+    exactly like ``SimCompositeOp.sample_durations``."""
+    sub_terms = getattr(op, "terms", None)
+    if not sub_terms:
+        return [(op, p, msize)]
+    out = []
+    for sub, ms, ps in sub_terms:
+        out.append((sub, op._term_p(p, ps), max(0, int(round(ms * msize)))))
+    return out
+
+
+def run_windowed_jax(net, sync, op, msize, nrep, win_size,
+                     ranks=None, use_pallas: bool | None = None) -> WindowRun:
+    """JAX port of ``run_windowed``'s batch engine (affine clocks only).
+
+    Strict by design: raises :class:`SimJaxUnavailable` on random-walk
+    clocks or a missing jax instead of silently degrading —
+    ``resolve_engine`` is the sanctioned soft-fallback path.
+    """
+    ranks = list(range(net.p)) if ranks is None else ranks
+    p = len(ranks)
+    if not all(net.clocks[r].rw_sigma <= 0.0 for r in ranks):
+        raise SimJaxUnavailable(
+            "engine='jax' requires affine clocks (rw_sigma == 0); use "
+            "engine='batch_rw' (or 'auto') for random-walk clocks")
+    jax, sample, window = _jitted()
+    if use_pallas is None:
+        use_pallas = _use_pallas_default()
+    if nrep <= 0:
+        empty = np.empty((0, p))
+        return WindowRun(times=np.empty(0),
+                         errors=np.empty(0, dtype=np.int64),
+                         start_global_est=empty, end_global_est=empty.copy(),
+                         start_true=empty.copy(), end_true=empty.copy())
+
+    g_now = max(sync.global_time(net, r) for r in ranks)
+    start_time = g_now + win_size
+    n = _bucket(nrep)
+    seed = int(net.rng.integers(2**31))
+    terms = _terms(op, p, msize)
+
+    t0 = np.asarray(net.t[ranks], dtype=np.float64)
+    off = np.array([net.clocks[r].offset for r in ranks])
+    skew = np.array([net.clocks[r].skew for r in ranks])
+    scale = np.array([net.clocks[r].scale_error for r in ranks])
+    slope = np.array([sync.models[r].slope for r in ranks])
+    intercept = np.array([sync.models[r].intercept for r in ranks])
+    init_t = np.array([sync.initial_times[r] for r in ranks])
+
+    from jax.experimental import enable_x64
+    with enable_x64():
+        key = jax.random.PRNGKey(seed)
+        durations = None
+        for j, (sub, tp, tm) in enumerate(terms):
+            t0_op = sub.base_time(tp, tm) * sub._bias_for(net)
+            dur, s = sample(jax.random.fold_in(key, j), t0_op,
+                            sub._ar_state, sub.noise_sigma, sub.autocorr,
+                            sub.tail_prob, sub.tail_shift, sub.spike_prob,
+                            sub.spike_scale, n=n, use_pallas=use_pallas)
+            sub._ar_state = float(s[nrep - 1])
+            durations = dur if durations is None else durations + dur
+        times, errors, sg, eg, st, et = window(
+            durations, jax.random.fold_in(key, len(terms)), t0, off, skew,
+            scale, slope, intercept, init_t, op.rank_imbalance, start_time,
+            win_size)
+        et = np.asarray(et, dtype=np.float64)[:nrep]
+
+    net.t[ranks] = et[nrep - 1]
+    return WindowRun(
+        times=np.asarray(times, dtype=np.float64)[:nrep],
+        errors=np.asarray(errors, dtype=np.int64)[:nrep],
+        start_global_est=np.asarray(sg, dtype=np.float64)[:nrep],
+        end_global_est=np.asarray(eg, dtype=np.float64)[:nrep],
+        start_true=np.asarray(st, dtype=np.float64)[:nrep],
+        end_true=et,
+    )

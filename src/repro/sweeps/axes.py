@@ -5,9 +5,10 @@ experimental factor and the levels a sweep varies it over, mapped onto a
 :class:`~repro.campaign.SimBackend` / :class:`~repro.core.design.
 ExperimentDesign` constructor field. Five of the stock axes genuinely
 change what is measured (synchronization method, window size, buffer
-policy, epoch isolation, randomization); ``dtype`` is a deliberate *null
-factor* — a pure label in the simulator — so the factor-impact analysis
-always carries its own negative control. The ``tuning`` axis seeds the
+policy, epoch isolation, randomization); ``dtype`` (a pure label in the
+simulator) and ``engine`` (statistically-equivalent numpy vs JAX window
+engines) are deliberate *null factors*, so the factor-impact analysis
+always carries its own negative controls. The ``tuning`` axis seeds the
 one defect the whole pipeline exists to find: a single mis-tuned
 collective (``SimBackend.per_op_kw``), which must come out as the
 top-ranked main effect of :func:`repro.sweeps.effects.main_effects`.
@@ -48,6 +49,11 @@ def _stock_axes() -> tuple[FactorAxis, ...]:
         FactorAxis("epoch_isolation", ("process", "none")),
         FactorAxis("shuffle", (True, False), target="design"),
         FactorAxis("dtype", ("float32", "float64")),
+        # Like dtype, a by-design null factor: the numpy and JAX window
+        # engines are statistically equivalent, so an "engine" main effect
+        # flags an engine-port bug, not a real factor. (`"jax"` resolves to
+        # the numpy batch engine, with a warning, where jax is absent.)
+        FactorAxis("engine", ("auto", "jax")),
     )
 
 

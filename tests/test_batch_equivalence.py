@@ -143,15 +143,158 @@ def test_windowed_engine_dispatch():
                      engine="nope")
 
 
-def test_windowed_scalar_engine_used_for_random_walk_clocks():
+def test_windowed_auto_never_scalar_for_random_walk_clocks():
+    """The historic silent scalar fallback is retired: ``auto`` resolves to
+    the vectorized ``batch_rw`` engine on random-walk clocks, and the
+    strict ``batch`` engine still refuses them."""
     from repro.core import ClockParams
+    from repro.core.window import resolve_engine
+
     net = SimNet(4, seed=3, clocks=ClockParams(rw_sigma=1e-7))
+    assert resolve_engine("auto", net) == ("batch_rw", None)
     sync = make_sync("hca", **SYNC_KW).synchronize(net)
     wr = run_windowed(net, sync, make_op("bcast"), 256, 30, 400e-6)
-    assert wr.times.size == 30          # auto -> scalar, no crash
+    assert wr.times.size == 30          # auto -> batch_rw, no crash
     with pytest.raises(ValueError):
         run_windowed(net, sync, make_op("bcast"), 256, 10, 400e-6,
                      engine="batch")
+
+
+# ---------------------------------------------------------------------------
+# run_windowed: batch_rw (random-walk clocks) vs scalar
+# ---------------------------------------------------------------------------
+
+def _synced_rw(seed, p=8, rw_sigma=1e-7):
+    from repro.core import ClockParams
+
+    net = SimNet(p, seed=seed, clocks=ClockParams(rw_sigma=rw_sigma))
+    sync = make_sync("hca", **SYNC_KW).synchronize(net)
+    return net, sync
+
+
+def test_derive_stream_is_deterministic():
+    """Key-derived streams are a pure function of (root, keys) — the one
+    derivation helper shared by epoch biases, drift paths and the JAX
+    engine's seeding."""
+    from repro.core.clocks import derive_stream
+
+    a = derive_stream(123, "drift-path").normal(size=4)
+    b = derive_stream(123, "drift-path").normal(size=4)
+    assert np.array_equal(a, b)
+    c = derive_stream(123, "other-key").normal(size=4)
+    assert not np.array_equal(a, c)
+    # Generator parent: consumes exactly one draw, bit-stable
+    g1, g2 = np.random.default_rng(9), np.random.default_rng(9)
+    assert np.array_equal(derive_stream(g1).normal(size=4),
+                          derive_stream(g2).normal(size=4))
+    assert np.array_equal(g1.integers(2**31, size=3),
+                          g2.integers(2**31, size=3))
+
+
+def test_drift_path_roundtrip_inversion():
+    """true_at_local(read(t)) == t on an active drift path: the batched
+    piecewise-affine inversion is the exact inverse of the forward read."""
+    from repro.core.clocks import SimClock
+
+    clk = SimClock(offset=0.01, skew=3e-6, rw_sigma=1e-7, seed=5)
+    clk.drift_path(400e-6)
+    t = np.linspace(0.0, 2.0, 5000)
+    local = clk.read(t)
+    assert np.all(np.diff(local) > 0)   # monotone, hence invertible
+    np.testing.assert_allclose(clk.true_at_local(local), t,
+                               rtol=0, atol=1e-9)
+
+
+def test_windowed_rw_batch_exact_on_frozen_paths():
+    """Scalar vs batched-bisection engine over the *same frozen drift
+    paths* (identical seeds pin identical walks): noise-free, the two
+    engines compute the same campaign to float-associativity noise."""
+    win = 300e-6
+    net_a, sync_a = _synced_rw(5, p=16)
+    net_b, sync_b = _synced_rw(5, p=16)
+    net_a.freeze_drift_paths(win)
+    net_b.freeze_drift_paths(win)
+    a = run_windowed_scalar(net_a, sync_a, make_op("allreduce", **NOISE_FREE),
+                            4096, 300, win)
+    b = run_windowed(net_b, sync_b, make_op("allreduce", **NOISE_FREE),
+                     4096, 300, win, engine="batch_rw")
+    assert np.array_equal(a.errors, b.errors)
+    np.testing.assert_allclose(a.times, b.times, rtol=0, atol=1e-12)
+    np.testing.assert_allclose(a.end_true, b.end_true, rtol=0, atol=1e-12)
+    np.testing.assert_allclose(a.start_global_est, b.start_global_est,
+                               rtol=0, atol=1e-12)
+    np.testing.assert_allclose(net_a.t, net_b.t, rtol=0, atol=1e-12)
+
+
+def test_windowed_rw_batch_matches_scalar_statistically():
+    """Live RNG on random-walk clocks: pre-sampled path vs lazy walk are
+    different draws of the same process — Wilcoxon must not tell the
+    engines apart."""
+    net_a, sync_a = _synced_rw(7, p=8)
+    net_b, sync_b = _synced_rw(7, p=8)
+    a = run_windowed_scalar(net_a, sync_a, make_op("allreduce"), 4096, 2500,
+                            300e-6)
+    b = run_windowed(net_b, sync_b, make_op("allreduce"), 4096, 2500,
+                     300e-6, engine="batch_rw")
+    res = wilcoxon_rank_sum(a.valid_times, b.valid_times)
+    assert res.p_value > 0.05, res.p_value
+    assert abs(a.valid_times.mean() - b.valid_times.mean()) \
+        < 0.02 * a.valid_times.mean()
+
+
+# ---------------------------------------------------------------------------
+# run_windowed: jax engine vs numpy
+# ---------------------------------------------------------------------------
+
+def test_simjax_matches_numpy_statistically():
+    """Cross-engine equivalence: the jit-compiled engine samples with JAX's
+    counter-based PRNG, so campaigns are different draws of the same
+    distribution — Wilcoxon-indistinguishable from the numpy batch engine."""
+    pytest.importorskip("jax")
+    net_a, sync_a = _synced(7, p=16)
+    net_b, sync_b = _synced(7, p=16)
+    a = run_windowed(net_a, sync_a, make_op("allreduce"), 4096, 3000,
+                     300e-6, engine="batch")
+    b = run_windowed(net_b, sync_b, make_op("allreduce"), 4096, 3000,
+                     300e-6, engine="jax")
+    res = wilcoxon_rank_sum(a.valid_times, b.valid_times)
+    assert res.p_value > 0.05, res.p_value
+    assert abs(a.valid_times.mean() - b.valid_times.mean()) \
+        < 0.02 * a.valid_times.mean()
+    assert abs(a.invalid_fraction - b.invalid_fraction) < 0.05
+
+
+def test_simjax_composite_chunking_and_state():
+    """Composite op expressions run per-term through the jitted sampler;
+    consecutive chunks (small nrep exercises the compile-shape bucketing)
+    stay on one monotone timeline and advance each term's AR(1) state."""
+    pytest.importorskip("jax")
+    from repro.core.mpi_ops import make_composite_op
+
+    net, sync = _synced(11, p=4)
+    op = make_composite_op("allreduce + bcast*0.5")
+    w1 = run_windowed(net, sync, op, 512, 40, 400e-6, engine="jax")
+    states = [term._ar_state for term, _, _ in op.terms]
+    w2 = run_windowed(net, sync, op, 512, 37, 400e-6, engine="jax")
+    assert w1.times.shape == (40,) and w2.times.shape == (37,)
+    assert w2.start_true.min() > w1.end_true.max() - 1e-9
+    assert all(s1 != s2 for s1, s2 in
+               zip(states, [term._ar_state for term, _, _ in op.terms]))
+
+
+def test_simjax_strict_on_random_walk_clocks():
+    """The explicit jax engine never silently degrades: random-walk clocks
+    raise; ``resolve_engine`` is the sanctioned soft-fallback path."""
+    pytest.importorskip("jax")
+    from repro.core.window import resolve_engine
+    from repro.simjax import SimJaxUnavailable
+
+    net, sync = _synced_rw(3, p=4)
+    with pytest.raises(SimJaxUnavailable):
+        run_windowed(net, sync, make_op("bcast"), 256, 10, 400e-6,
+                     engine="jax")
+    resolved, note = resolve_engine("jax", net)
+    assert resolved == "batch_rw" and note is not None
 
 
 # ---------------------------------------------------------------------------

@@ -41,6 +41,50 @@ def test_backends_satisfy_protocol():
         assert fs.fingerprint()
 
 
+def test_sim_backend_records_resolved_engine_meta():
+    """Each record carries the engine that actually ran — ``auto`` on
+    affine clocks resolves to ``batch``, and on random-walk clocks to
+    ``batch_rw`` (never the scalar path)."""
+    res = Campaign(_spec([TestCase("bcast", 256)], n_launch_epochs=2,
+                         nrep=10), _sim(seed0=5)).run()
+    assert all(r.meta["engine"] == "batch" for r in res.records)
+    res_rw = Campaign(_spec([TestCase("bcast", 256)], n_launch_epochs=2,
+                            nrep=10),
+                      _sim(seed0=5, clock_kw=dict(rw_sigma=1e-7))).run()
+    assert all(r.meta["engine"] == "batch_rw" for r in res_rw.records)
+
+
+def test_sim_backend_jax_engine_fallback_warns_once_and_is_recorded():
+    """engine='jax' on random-walk clocks: substituted (batch_rw), warned
+    exactly once per campaign, and stamped on every record's meta."""
+    import warnings
+
+    backend = _sim(seed0=5, engine="jax", clock_kw=dict(rw_sigma=1e-7))
+    spec = _spec([TestCase("bcast", 256)], n_launch_epochs=3, nrep=10)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        res = Campaign(spec, backend).run()
+    fallback = [w for w in caught if issubclass(w.category, RuntimeWarning)
+                and "resolved to" in str(w.message)]
+    assert len(fallback) == 1, [str(w.message) for w in caught]
+    assert all(r.meta["engine"] == "batch_rw" for r in res.records)
+    assert all("engine_fallback" in r.meta for r in res.records)
+
+
+def test_sim_backend_jax_engine_end_to_end():
+    """A campaign through the jit-compiled engine: right shapes, engine
+    recorded, and means in the same ballpark as the numpy engine."""
+    pytest.importorskip("jax")
+    spec = _spec([TestCase("allreduce", 512)], n_launch_epochs=2, nrep=30)
+    res_np = Campaign(spec, _sim(seed0=5)).run()
+    res_jx = Campaign(spec, _sim(seed0=5, engine="jax")).run()
+    assert all(r.meta["engine"] == "jax" for r in res_jx.records)
+    case = res_jx.table.cases()[0]
+    m_np = float(np.mean(res_np.table.means(case)))
+    m_jx = float(np.mean(res_jx.table.means(case)))
+    assert abs(m_np - m_jx) < 0.05 * m_np
+
+
 def test_run_design_accepts_backend():
     """run_design consumes a backend directly (no ad-hoc pair) and falls
     back to the backend's default cases."""

@@ -166,3 +166,52 @@ def test_ssm_block_decode_matches_train():
     y_dec = jnp.stack(outs, axis=1)
     np.testing.assert_allclose(np.asarray(y_train), np.asarray(y_dec),
                                rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# sim_scan: fused duration-sampling kernel (repro.simjax hot path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("coeff", [0.35, 0.0, -0.5, 0.9])
+@pytest.mark.parametrize("n", [32, 1000])
+def test_sim_scan_kernel_matches_ref(coeff, n):
+    """Pallas fused AR(1)+mixture == the associative_scan oracle, across
+    chunk-aligned and padded lengths and the coeff operating range."""
+    from jax.experimental import enable_x64
+
+    from repro.kernels.sim_scan.kernel import sim_durations_scan
+    from repro.kernels.sim_scan.ref import sim_durations_ref
+
+    with enable_x64():
+        key = jax.random.PRNGKey(coeff is None or int(abs(coeff) * 100))
+        ks = jax.random.split(key, 4)
+        eps = 0.04 * jax.random.normal(ks[0], (n,), jnp.float64)
+        u = [jax.random.uniform(k, (n,), jnp.float64) for k in ks[1:]]
+        kw = dict(coeff=coeff, state=0.1, t0=22e-6, tail_prob=0.08,
+                  tail_shift=0.35, spike_prob=0.003, spike_scale=8.0)
+        t_ref, s_ref = sim_durations_ref(eps, *u, **kw)
+        t_ker, s_ker = sim_durations_scan(eps, *u, **kw)
+        np.testing.assert_allclose(np.asarray(t_ker), np.asarray(t_ref),
+                                   rtol=1e-12, atol=1e-18)
+        np.testing.assert_allclose(np.asarray(s_ker), np.asarray(s_ref),
+                                   rtol=1e-12, atol=1e-14)
+
+
+def test_sim_scan_ref_matches_numpy_ar1_filter():
+    """The jnp oracle reproduces the numpy engine's _ar1_filter math."""
+    from jax.experimental import enable_x64
+
+    from repro.core.mpi_ops import _ar1_filter
+    from repro.kernels.sim_scan.ref import sim_durations_ref
+
+    rng = np.random.default_rng(7)
+    eps = rng.normal(0.0, 0.04, size=500)
+    with enable_x64():
+        zeros = jnp.zeros(500, jnp.float64)
+        _, s = sim_durations_ref(jnp.asarray(eps), zeros, zeros, zeros,
+                                 coeff=0.35, state=0.7, t0=1.0,
+                                 tail_prob=0.0, tail_shift=0.0,
+                                 spike_prob=0.0, spike_scale=1.0)
+    np.testing.assert_allclose(np.asarray(s),
+                               _ar1_filter(eps, 0.35, 0.7),
+                               rtol=1e-10, atol=1e-14)
