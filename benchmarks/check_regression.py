@@ -1,9 +1,9 @@
-"""CI perf gate: compare a fresh ``benchmarks.run --json`` report against
-the committed baseline and fail on wall-clock regressions.
+"""CI perf gate: compare a fresh ``benchmarks.run run --json`` report
+against the committed baseline and fail on wall-clock regressions.
 
 Usage::
 
-    python -m benchmarks.run --only micro --json fresh.json
+    python -m benchmarks.run run --only micro --json fresh.json
     python benchmarks/check_regression.py benchmarks/baseline.json fresh.json \
         --tolerance 2.0
 
@@ -24,6 +24,13 @@ A bench present in the baseline but missing (or erroring) in the fresh
 report fails the gate; *new* benches in the fresh report pass with a note,
 so adding a benchmark does not require touching the baseline in the same
 commit.
+
+Each report also carries the total repetitions spent per bench
+(``nrep_total``) — the machine-independent experiment cost. It is printed
+for the record whenever both reports carry it, but never gated: nrep
+changes are deliberate design changes (adaptive stopping, budgeted
+allocation), not environmental noise, so they belong in review diffs of
+the baseline, not in a tolerance band.
 """
 
 from __future__ import annotations
@@ -86,6 +93,17 @@ def check(baseline: dict[str, dict], fresh: dict[str, dict],
               f"{'ok' if ok else f'FAIL (< 1/{tolerance:g} of baseline)'}")
         if not ok:
             failures += 1
+    # informational: repetitions spent (exact counts, not gated — see
+    # module docstring)
+    nrep_pairs = [(n, b.get("nrep_total"), fresh.get(n, {}).get("nrep_total"))
+                  for n, b in sorted(baseline.items())]
+    nrep_pairs = [(n, b, f) for n, b, f in nrep_pairs
+                  if b is not None and f is not None]
+    if nrep_pairs:
+        print(f"{'bench (nrep spent)':<36} {'base':>9} {'fresh':>9}")
+        for name, base_n, fresh_n in nrep_pairs:
+            drift = "" if base_n == fresh_n else "  (changed)"
+            print(f"{name:<36} {base_n:>9} {fresh_n:>9}{drift}")
     return failures
 
 

@@ -1,67 +1,32 @@
-"""Benchmark harness entry point: ``python -m benchmarks.run [options]``.
+"""Benchmark harness entry point: ``python -m benchmarks.run <command>``.
 
-One function per paper table/figure (see ``benchmarks.suite``). Prints
-``name,us_per_call,derived`` CSV; per-bench wall-clock goes to stderr.
+Subcommands (``--help`` on each for its full flag set):
 
-Options:
-  --only SUBSTR   substring filter on benchmark function names
-                  (e.g. ``--only fig`` for the simulation-backed figures,
-                  ``--only micro`` for the engine microbenchmark)
-  --list          print the available benchmark names and exit
-  --seed N        offset every simulator seed by N (re-rolls the whole
-                  suite under a different RNG universe; default 0)
-  --workers N     processes for campaign launch epochs (default 1 =
-                  serial; N > 1 gives bit-identical results and pays off
-                  only when one epoch outweighs pool startup)
-  --json PATH     also write machine-readable results: per-bench wall-clock
-                  seconds + rows, for recording the perf trajectory in CI
-  --store PATH    persist campaign results to an append-only JSONL
-                  ResultStore (re-running against the same store resumes:
-                  already-measured cells are loaded, not re-measured)
-  --compare A B   compare two stores' campaigns per test case (Wilcoxon on
-                  per-epoch medians, Fig. 28 style) and exit
-  --guidelines    verify the PGMPI-style performance-guideline family
-                  instead of running the suite; ``--only`` selects the
-                  backend (``sim`` default, or ``kernel``), ``--store``
-                  makes the verification campaign resumable, ``--seed``
-                  re-rolls it. Exits non-zero when a guideline is VIOLATED
-                  (family-wise Holm-corrected alpha = 0.05), so it can gate
-                  CI directly.
-  --sweep         run a factor sweep on the sim backend and print the
-                  factor-impact report (Kruskal-Wallis + Holm main effects,
-                  Cliff's-delta ranking, interaction screen). ``--axes``
-                  picks the swept axes, ``--store`` makes the sweep
-                  resumable at cell granularity, ``--workers`` shards grid
-                  cells over a process pool, ``--seed`` re-rolls it.
-  --axes NAMES    comma-separated subset of the stock factor axes for
-                  ``--sweep`` (default: tuning,sync_method,window_us,dtype)
-  --fleet N       run ``--sweep`` fault-tolerantly on N lease-queue worker
-                  processes (``repro.fleet``): dead/stalled workers lose
-                  their lease, cells retry under jittered backoff, and
-                  repeated failures are quarantined into the store instead
-                  of wedging the sweep. Requires ``--store``. Quarantined
-                  cells are reported on stderr with exit 0 (degraded-but-
-                  honest); exit 1 only when no cell completes at all.
-  --faults SPEC   inject seeded, deterministic faults into a ``--fleet``
-                  sweep (chaos mode), e.g. ``crash=0.4,straggle=0.2,seed=7``
-                  — kinds: crash (worker killed mid-cell), straggle (stall
-                  past the lease TTL), raise (transient exception), torn
-                  (corrupt shard line)
-  --archive DIR   run-archive directory (``repro.history.RunArchive``); the
-                  audit campaign registers its store here
-  --audit         reproducibility-audit mode: run the fixed sim audit
-                  campaign, register it into ``--archive``, and issue TOST
-                  equivalence verdicts against the baseline run (latest
-                  archived run sharing the factor fingerprint, or the run
-                  pinned by ``--baseline``). Prints the drift report; exits
-                  1 when any cell is DRIFTED, so it gates CI directly. The
-                  first run into an empty archive registers as the initial
-                  reference and exits 0.
-  --baseline TAG  audit against the archived run tagged TAG
-  --tag TAG       register this run under TAG (e.g. ``reference``)
-  --mistune OP    seed a drifted collective (4x latency, 3x overhead) into
-                  the audit run — the positive control: exactly OP's cells
-                  must come out DRIFTED
+  run         run the benchmark suite (default when no command is given).
+              One function per paper table/figure (``benchmarks.suite``);
+              prints ``name,us_per_call,derived`` CSV, per-bench
+              wall-clock *and total nrep spent* go to stderr / ``--json``.
+  sweep       run a factor sweep on the sim backend and print the
+              factor-impact report. ``--axes`` picks the swept axes,
+              ``--store`` makes it resumable, ``--workers`` shards cells
+              over a pool, ``--fleet N`` runs it on a lease-queue worker
+              fleet (``--faults`` injects chaos), and ``--policy``
+              switches to *budgeted* allocation: ``racing`` /
+              ``successive_halving`` spend nrep only on axes whose
+              MATTERS-or-null verdict is still undecided (``--budget``
+              caps total nrep; ``--verdicts PATH`` writes the final
+              per-axis verdicts as JSON for gating).
+  guidelines  verify the PGMPI-style performance-guideline family
+              (``--backend sim|kernel``); exit 1 on violation.
+  audit       run the fixed sim audit campaign, register it into
+              ``--archive``, and issue TOST equivalence verdicts against
+              the baseline; exit 1 on DRIFTED.
+  compare     Wilcoxon comparison of two stores' campaigns (Fig. 28).
+
+The pre-subcommand flag spelling (``--sweep``, ``--guidelines``,
+``--audit``, ``--compare``, or bare suite flags) still works through a
+shim that rewrites the argv and emits a :class:`DeprecationWarning` —
+update invocations to the subcommand form.
 """
 
 from __future__ import annotations
@@ -70,6 +35,45 @@ import argparse
 import json
 import sys
 import time
+import warnings
+
+SUBCOMMANDS = ("run", "sweep", "guidelines", "audit", "compare")
+
+
+def _legacy_argv(argv: list[str]) -> list[str]:
+    """Map a legacy flag-style invocation onto the subcommand CLI.
+
+    The returned argv is what the subcommand parser consumes; any
+    rewriting (other than defaulting a bare no-argument call to ``run``)
+    warns with the canonical spelling, so CI logs show exactly what to
+    migrate to.
+    """
+    if not argv:
+        return ["run"]            # documented no-args behavior, not legacy
+    if argv[0] in SUBCOMMANDS or argv[0] in ("-h", "--help"):
+        return list(argv)
+    args = list(argv)
+    if "--compare" in args:
+        i = args.index("--compare")
+        new = ["compare", *args[i + 1:i + 3]]
+    elif "--audit" in args:
+        args.remove("--audit")
+        new = ["audit", *args]
+    elif "--guidelines" in args:
+        args.remove("--guidelines")
+        if "--only" in args:       # --only picked the backend here
+            args[args.index("--only")] = "--backend"
+        new = ["guidelines", *args]
+    elif "--sweep" in args:
+        args.remove("--sweep")
+        new = ["sweep", *args]
+    else:
+        new = ["run", *args]
+    warnings.warn(
+        "flag-style invocation of benchmarks.run is deprecated; use the "
+        f"subcommand form: python -m benchmarks.run {' '.join(new)}",
+        DeprecationWarning, stacklevel=3)
+    return new
 
 
 def _compare_stores(ap, path_a: str, path_b: str) -> None:
@@ -83,11 +87,11 @@ def _compare_stores(ap, path_a: str, path_b: str) -> None:
 
     for p in (path_a, path_b):
         if not os.path.exists(p):
-            ap.error(f"--compare: store not found: {p}")
+            ap.error(f"compare: store not found: {p}")
     store_a, store_b = ResultStore(path_a), ResultStore(path_b)
     fps_a, fps_b = store_a.fingerprints(), store_b.fingerprints()
     if not fps_a or not fps_b:
-        ap.error("--compare: a store holds no campaigns")
+        ap.error("compare: a store holds no campaigns")
     for path, fps in ((path_a, fps_a), (path_b, fps_b)):
         if len(fps) > 1:
             print(f"# note: {path} holds {len(fps)} campaigns; comparing "
@@ -100,7 +104,7 @@ def _compare_stores(ap, path_a: str, path_b: str) -> None:
     try:
         rows = compare_tables(store_a, store_b)
     except ValueError as e:   # no common (op, msize) cells
-        ap.error(f"--compare: {e}")
+        ap.error(f"compare: {e}")
     print(format_comparison(rows, name_a=os.path.basename(path_a),
                             name_b=os.path.basename(path_b)))
 
@@ -114,13 +118,13 @@ def _run_guidelines(ap, args) -> None:
     from repro.guidelines import (default_guidelines, format_report,
                                   format_violations, verify_guidelines)
 
-    backend_name = args.only or "sim"
+    backend_name = args.backend
     if backend_name == "sim":
         backend = SimBackend(p=8, seed0=args.seed)
         design = ExperimentDesign(n_launch_epochs=10, nrep_min=20,
                                   nrep_max=150, rel_ci_target=0.05,
                                   seed=args.seed)
-    elif backend_name == "kernel":
+    else:
         # interpret mode off-TPU: the "pallas <= ref" guideline is expected
         # to fail there — the verdict names the emulation factor, which is
         # the point of carrying factors on every result. Lighter design:
@@ -129,9 +133,6 @@ def _run_guidelines(ap, args) -> None:
         design = ExperimentDesign(n_launch_epochs=6, nrep_min=10,
                                   nrep_max=40, rel_ci_target=0.10,
                                   seed=args.seed)
-    else:
-        ap.error(f"--guidelines: unknown backend {backend_name!r} "
-                 "(--only sim|kernel)")
     guidelines = default_guidelines(backend_name)
     store = ResultStore(args.store) if args.store else None
     report = verify_guidelines(guidelines, backend, design=design,
@@ -150,7 +151,8 @@ def _run_guidelines(ap, args) -> None:
 def _run_sweep(ap, args) -> None:
     """Factor-sweep mode: enumerate a factor grid, run every cell as its
     own campaign (resumable through the store), and print the paper-style
-    "which factors matter" table."""
+    "which factors matter" table. With ``--policy``, allocation is
+    budgeted: rounds of measurement with per-look axis verdicts."""
     from repro.campaign import ResultStore, SweepScheduler
     from repro.sweeps import (cells_from_result, default_sim_sweep,
                               format_factor_report, interaction_screen,
@@ -164,13 +166,24 @@ def _run_sweep(ap, args) -> None:
     except ValueError as e:
         ap.error(f"--axes: {e}")
     store = ResultStore(args.store) if args.store else None
+    policy = None
+    if args.policy:
+        if store is None:
+            ap.error("--policy needs --store PATH: allocation rounds "
+                     "persist their decisions as sweep-alloc lines")
+        from repro.sweeps import make_policy
+        policy = make_policy(args.policy, nrep_budget=args.budget)
+    elif args.budget is not None:
+        ap.error("--budget only makes sense with --policy")
     if args.fleet is not None:
-        res = _run_fleet_sweep(ap, args, spec, backend, store)
+        res = _run_fleet_sweep(ap, args, spec, backend, store, policy)
     else:
         res = SweepScheduler(spec, backend, store,
-                             n_workers=args.workers or 1).run()
+                             n_workers=args.workers or 1,
+                             policy=policy).run()
     cells = cells_from_result(res)
     axis_names = ", ".join(ax.name for ax in spec.grid.axes)
+    effects = None
     try:
         effects = main_effects(cells)
     except ValueError as e:
@@ -185,6 +198,31 @@ def _run_sweep(ap, args) -> None:
     else:
         print(format_factor_report(effects, interaction_screen(cells),
                                    title=f"factor impact [{axis_names}]"))
+    alloc = res.meta.get("alloc")
+    if alloc:
+        sv = (f"{alloc['savings']:.2f}x" if alloc.get("savings")
+              else "n/a")
+        print(f"# alloc: policy={alloc['policy']} "
+              f"rounds={alloc['n_rounds']} "
+              f"spent_nrep={alloc['spent_nrep']} "
+              f"uniform_nrep={alloc['uniform_nrep']} savings={sv}",
+              file=sys.stderr)
+        print(f"# alloc decisions: {alloc['decisions']}"
+              + (f" undecided: {alloc['undecided']}"
+                 if alloc.get("undecided") else ""), file=sys.stderr)
+    if args.verdicts:
+        verdicts = {}
+        if effects is not None:
+            verdicts = {e.axis: ("MATTERS" if e.significant else "null")
+                        for e in effects}
+        if alloc:
+            # the sequential verdicts are authoritative for the axes they
+            # resolved; the one-shot report only fills in the leftovers
+            verdicts.update(alloc["decisions"])
+        with open(args.verdicts, "w") as f:
+            json.dump(dict(axes=verdicts, alloc=alloc), f, indent=2,
+                      sort_keys=True)
+        print(f"# wrote {args.verdicts}", file=sys.stderr)
     if store is not None:
         print(f"# store: {args.store} (resumable; "
               f"{res.n_cells_resumed} cells resumed, "
@@ -192,7 +230,7 @@ def _run_sweep(ap, args) -> None:
               file=sys.stderr)
 
 
-def _run_fleet_sweep(ap, args, spec, backend, store):
+def _run_fleet_sweep(ap, args, spec, backend, store, policy=None):
     """Fault-tolerant sweep execution (``--fleet N``): lease-queue
     scheduling over N worker processes, optionally under an injected
     :class:`~repro.fleet.FaultPlan` (``--faults``). Degradation semantics:
@@ -211,7 +249,7 @@ def _run_fleet_sweep(ap, args, spec, backend, store):
         except ValueError as e:
             ap.error(f"--faults: {e}")
     cfg = FleetConfig(n_workers=max(1, args.fleet), faults=plan)
-    res = FleetScheduler(spec, backend, store, cfg).run()
+    res = FleetScheduler(spec, backend, store, cfg, policy=policy).run()
     fl = res.fleet
     print(f"# fleet: {fl.get('n_workers')} workers, "
           f"{fl.get('n_done', 0)}/{fl.get('n_cells', 0)} cells done, "
@@ -291,85 +329,9 @@ def _run_audit(ap, args) -> None:
         raise SystemExit(1)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser(
-        description="MPI-benchmarking-revisited reproduction suite")
-    ap.add_argument("--only", default=None,
-                    help="substring filter on benchmark names")
-    ap.add_argument("--list", action="store_true",
-                    help="list available benchmarks and exit")
-    ap.add_argument("--seed", type=int, default=0,
-                    help="offset added to every simulator seed (>= 0)")
-    ap.add_argument("--workers", type=int, default=None,
-                    help="process-pool size for campaign launch epochs")
-    ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write per-bench wall-clock + rows as JSON")
-    ap.add_argument("--store", default=None, metavar="PATH",
-                    help="persist campaign results to a JSONL ResultStore")
-    ap.add_argument("--compare", nargs=2, default=None,
-                    metavar=("STOREA", "STOREB"),
-                    help="print the Wilcoxon comparison of two stores and exit")
-    ap.add_argument("--guidelines", action="store_true",
-                    help="verify performance guidelines (PGMPI) and exit; "
-                         "--only picks the backend (sim|kernel)")
-    ap.add_argument("--sweep", action="store_true",
-                    help="run a factor sweep (sim backend) and print the "
-                         "factor-impact report; --axes/--store/--workers "
-                         "apply")
-    ap.add_argument("--axes", default=None, metavar="NAMES",
-                    help="comma-separated factor axes for --sweep")
-    ap.add_argument("--fleet", type=int, default=None, metavar="N",
-                    help="run --sweep fault-tolerantly on N lease-queue "
-                         "workers (requires --store; quarantined cells are "
-                         "reported, exit 1 only if nothing completes)")
-    ap.add_argument("--faults", default=None, metavar="SPEC",
-                    help="inject seeded faults into a --fleet sweep, e.g. "
-                         "crash=0.4,straggle=0.2,seed=7 (kinds: crash, "
-                         "straggle, raise, torn)")
-    ap.add_argument("--archive", default=None, metavar="DIR",
-                    help="run-archive directory for --audit")
-    ap.add_argument("--audit", action="store_true",
-                    help="run the sim audit campaign, archive it, and issue "
-                         "TOST equivalence verdicts vs the baseline; exit 1 "
-                         "on DRIFTED")
-    ap.add_argument("--baseline", default=None, metavar="TAG",
-                    help="audit against the archived run tagged TAG")
-    ap.add_argument("--tag", default=None, metavar="TAG",
-                    help="register this audit run under TAG")
-    ap.add_argument("--mistune", default=None, metavar="OP",
-                    help="seed a drifted collective into the audit run "
-                         "(positive control)")
-    args = ap.parse_args()
-    if args.seed < 0:
-        ap.error("--seed must be >= 0 (it offsets non-negative RNG seeds)")
-    if args.axes and not args.sweep:
-        ap.error("--axes only makes sense with --sweep")
-    if args.fleet is not None and not args.sweep:
-        ap.error("--fleet only makes sense with --sweep")
-    if args.faults and args.fleet is None:
-        ap.error("--faults only makes sense with --fleet")
-    if args.audit and not args.archive:
-        ap.error("--audit needs --archive DIR (where runs are registered)")
-    for flag, val in (("--baseline", args.baseline), ("--tag", args.tag),
-                      ("--mistune", args.mistune)):
-        if val and not args.audit:
-            ap.error(f"{flag} only makes sense with --audit")
-
-    if args.compare:
-        _compare_stores(ap, *args.compare)
-        return
-
-    if args.audit:
-        _run_audit(ap, args)
-        return
-
-    if args.guidelines:
-        _run_guidelines(ap, args)
-        return
-
-    if args.sweep:
-        _run_sweep(ap, args)
-        return
+def _run_suite(ap, args) -> None:
+    """The default mode: run the benchmark suite and print CSV rows."""
+    from repro.core.design import NREP_SPENT
 
     from benchmarks import suite
     from benchmarks.suite import ALL_BENCHES
@@ -397,28 +359,37 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     t_suite = time.time()
+    nrep_suite = NREP_SPENT.read()
     for bench in ALL_BENCHES:
         if args.only and args.only not in bench.__name__:
             continue
         t0 = time.time()
+        nrep0 = NREP_SPENT.read()
         try:
             rows = bench()
         except Exception as e:  # keep the suite running; report at the end
             print(f"{bench.__name__},NaN,ERROR:{e!r}", flush=True)
             report["benches"].append(
                 dict(name=bench.__name__, seconds=time.time() - t0,
+                     nrep_total=NREP_SPENT.read() - nrep0,
                      error=repr(e), rows=[]))
             failures += 1
             continue
         for name, us, derived in rows:
             print(f"{name},{us:.3f},{derived}", flush=True)
         dt = time.time() - t0
-        print(f"# {bench.__name__} took {dt:.1f}s", file=sys.stderr, flush=True)
+        nrep_total = NREP_SPENT.read() - nrep0
+        # repetitions spent is the machine-independent cost: wall-clock
+        # shows *when* a box is slow, nrep shows what the experiment *paid*
+        print(f"# {bench.__name__} took {dt:.1f}s, spent {nrep_total} nrep",
+              file=sys.stderr, flush=True)
         report["benches"].append(
             dict(name=bench.__name__, seconds=round(dt, 3),
+                 nrep_total=nrep_total,
                  rows=[dict(name=n, us_per_call=u, derived=d)
                        for n, u, d in rows]))
     report["total_seconds"] = round(time.time() - t_suite, 3)
+    report["total_nrep"] = NREP_SPENT.read() - nrep_suite
     report["failures"] = failures
     if args.json:
         with open(args.json, "w") as f:
@@ -426,6 +397,117 @@ def main() -> None:
         print(f"# wrote {args.json}", file=sys.stderr, flush=True)
     if failures:
         raise SystemExit(f"{failures} benchmarks failed")
+
+
+def _add_seed(p) -> None:
+    p.add_argument("--seed", type=int, default=0,
+                   help="offset added to every simulator seed (>= 0)")
+
+
+def _add_store(p, why: str) -> None:
+    p.add_argument("--store", default=None, metavar="PATH", help=why)
+
+
+def main(argv: list[str] | None = None) -> None:
+    argv = _legacy_argv(sys.argv[1:] if argv is None else list(argv))
+
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run",
+        description="MPI-benchmarking-revisited reproduction suite")
+    sub = ap.add_subparsers(dest="cmd", required=True, metavar="COMMAND")
+
+    p_run = sub.add_parser(
+        "run", help="run the benchmark suite (the default command)")
+    p_run.add_argument("--only", default=None,
+                       help="substring filter on benchmark names")
+    p_run.add_argument("--list", action="store_true",
+                       help="list available benchmarks and exit")
+    _add_seed(p_run)
+    p_run.add_argument("--workers", type=int, default=None,
+                       help="process-pool size for campaign launch epochs")
+    p_run.add_argument("--json", default=None, metavar="PATH",
+                       help="write per-bench wall-clock + nrep + rows as "
+                            "JSON")
+    _add_store(p_run, "persist campaign results to a JSONL ResultStore")
+
+    p_sweep = sub.add_parser(
+        "sweep", help="factor sweep + factor-impact report (sim backend)")
+    p_sweep.add_argument("--axes", default=None, metavar="NAMES",
+                         help="comma-separated subset of the stock factor "
+                              "axes (default: tuning,sync_method,"
+                              "window_us,dtype)")
+    _add_seed(p_sweep)
+    p_sweep.add_argument("--workers", type=int, default=None,
+                         help="shard grid cells over a process pool")
+    _add_store(p_sweep, "resumable sweep store (cell granularity; "
+                        "required by --policy and --fleet)")
+    p_sweep.add_argument("--policy", default=None,
+                         choices=("uniform", "racing", "successive_halving"),
+                         help="budgeted allocation policy: spend nrep in "
+                              "rounds, only on axes whose verdict is still "
+                              "undecided (requires --store)")
+    p_sweep.add_argument("--budget", type=int, default=None, metavar="NREP",
+                         help="total-nrep cap for --policy (a stop "
+                              "criterion: raising it only extends the "
+                              "allocation sequence)")
+    p_sweep.add_argument("--verdicts", default=None, metavar="PATH",
+                         help="write the final per-axis MATTERS/null "
+                              "verdicts (+ allocation summary) as JSON")
+    p_sweep.add_argument("--fleet", type=int, default=None, metavar="N",
+                         help="run fault-tolerantly on N lease-queue "
+                              "workers (requires --store; quarantined "
+                              "cells are reported, exit 1 only if nothing "
+                              "completes)")
+    p_sweep.add_argument("--faults", default=None, metavar="SPEC",
+                         help="inject seeded faults into a --fleet sweep, "
+                              "e.g. crash=0.4,straggle=0.2,seed=7 (kinds: "
+                              "crash, straggle, raise, torn)")
+
+    p_guide = sub.add_parser(
+        "guidelines", help="verify the performance-guideline family "
+                           "(exit 1 on violation)")
+    p_guide.add_argument("--backend", default="sim",
+                         choices=("sim", "kernel"),
+                         help="which implementation to audit")
+    _add_seed(p_guide)
+    _add_store(p_guide, "resumable verification store")
+
+    p_audit = sub.add_parser(
+        "audit", help="reproducibility audit vs the archived baseline "
+                      "(exit 1 on DRIFTED)")
+    p_audit.add_argument("--archive", required=True, metavar="DIR",
+                         help="run-archive directory "
+                              "(repro.history.RunArchive)")
+    p_audit.add_argument("--baseline", default=None, metavar="TAG",
+                         help="audit against the archived run tagged TAG")
+    p_audit.add_argument("--tag", default=None, metavar="TAG",
+                         help="register this audit run under TAG")
+    p_audit.add_argument("--mistune", default=None, metavar="OP",
+                         help="seed a drifted collective into the audit "
+                              "run (positive control)")
+    _add_seed(p_audit)
+
+    p_cmp = sub.add_parser(
+        "compare", help="Wilcoxon comparison of two stores' campaigns")
+    p_cmp.add_argument("store_a", metavar="STOREA")
+    p_cmp.add_argument("store_b", metavar="STOREB")
+
+    args = ap.parse_args(argv)
+    if getattr(args, "seed", 0) < 0:
+        ap.error("--seed must be >= 0 (it offsets non-negative RNG seeds)")
+    if args.cmd == "sweep" and args.faults and args.fleet is None:
+        ap.error("--faults only makes sense with --fleet")
+
+    if args.cmd == "compare":
+        _compare_stores(ap, args.store_a, args.store_b)
+    elif args.cmd == "audit":
+        _run_audit(ap, args)
+    elif args.cmd == "guidelines":
+        _run_guidelines(ap, args)
+    elif args.cmd == "sweep":
+        _run_sweep(ap, args)
+    else:
+        _run_suite(ap, args)
 
 
 if __name__ == "__main__":

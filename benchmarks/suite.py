@@ -26,7 +26,8 @@ import warnings
 
 import numpy as np
 
-from repro.campaign import Campaign, CampaignSpec, ResultStore, SimBackend
+from repro.campaign import (Campaign, CampaignSpec, FunctionBackend,
+                            ResultStore, SimBackend)
 from repro.core import (
     ClockParams,
     ExperimentDesign,
@@ -503,10 +504,18 @@ def bench_micro_sweeps():
     4-cell factor sweep (grid compile + per-cell campaigns + factor-impact
     analysis), so the CI perf gate covers the sweep subsystem. The
     ``derived`` column carries the top-ranked factor as a correctness
-    canary: it must be the injected ``tuning`` axis."""
+    canary: it must be the injected ``tuning`` axis.
+
+    The second row gates the budgeted-allocation subsystem: the same grid
+    run under the racing policy, reported as uniform-nrep / spent-nrep.
+    The ratio is a pure count of repetitions (machine-independent), so
+    check_regression treats it like a speedup row."""
+    import os
+    import tempfile
+
     from repro.campaign import SweepScheduler
     from repro.sweeps import (cells_from_result, default_sim_sweep,
-                              main_effects)
+                              main_effects, make_policy)
 
     spec, backend = default_sim_sweep(seed=_seed(7), axes=("tuning", "dtype"),
                                       n_launch_epochs=4, nrep=30)
@@ -515,11 +524,32 @@ def bench_micro_sweeps():
     effects = main_effects(cells_from_result(res))
     wall = time.perf_counter() - t0
     top = effects[0]
-    return [(
+    rows = [(
         "micro/sweep_4cells",
         wall / len(res.cells) * 1e6,
         f"wall={wall:.3f}s top={top.axis}(|d|={top.effect_size:.2f})",
     )]
+
+    # budgeted allocation on a 6-epoch variant of the same grid (racing
+    # needs epoch headroom to halt early; the ratio is exact, not timed)
+    spec_a, backend_a = default_sim_sweep(seed=_seed(7),
+                                          axes=("tuning", "dtype"),
+                                          n_launch_epochs=6, nrep=30)
+    with tempfile.TemporaryDirectory() as td:
+        store = ResultStore(os.path.join(td, "alloc.jsonl"))
+        res_a = SweepScheduler(spec_a, backend_a, store,
+                               policy=make_policy("racing")).run()
+    alloc = res_a.meta["alloc"]
+    decided = ",".join(f"{a}={v}" for a, v in sorted(
+        alloc["decisions"].items()))
+    rows.append((
+        "micro/alloc_savings_speedup",
+        float(alloc["savings"]),
+        f"rounds={alloc['n_rounds']} spent={alloc['spent_nrep']} "
+        f"uniform={alloc['uniform_nrep']} {decided} (x, not us; "
+        "racing must beat uniform)",
+    ))
+    return rows
 
 
 # ------------------------------------------------------------------- real
@@ -561,8 +591,9 @@ def bench_real_step_functions():
         epoch_factory, measure = make_jax_measure(
             build(remat), MeterConfig(warmup=2))
         records = run_design(ExperimentDesign(4, 15, seed=1),
-                             epoch_factory, measure,
-                             [TestCase("train_step", 0)])
+                             FunctionBackend(epoch_factory, measure,
+                                             name=f"jax-{label}"),
+                             cases=[TestCase("train_step", 0)])
         tables[label] = analyze_records(records)
         med = tables[label].medians(tables[label].cases()[0])
         rows.append((f"real/train_step_{label}", float(np.mean(med)) * 1e6,

@@ -17,14 +17,15 @@ live* (:class:`ResultStore`). ::
     rows = compare_tables(ResultStore("a.jsonl"), ResultStore("b.jsonl"))
 """
 
-from .backends import (JaxBackend, KernelBackend, MeasurementBackend,
-                       SimBackend, ensure_host_devices)
+from .backends import (FunctionBackend, JaxBackend, KernelBackend,
+                       MeasurementBackend, SimBackend, ensure_host_devices)
 from .core import Campaign, CampaignResult, CampaignSpec
 from .store import SCHEMA_VERSION, ResultStore, StoreSnapshot
 from .sweep import CellResult, SweepResult, SweepScheduler, SweepSpec
 
 __all__ = [
     "MeasurementBackend",
+    "FunctionBackend",
     "SimBackend",
     "JaxBackend",
     "KernelBackend",

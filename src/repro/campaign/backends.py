@@ -40,6 +40,7 @@ from repro.core.window import WindowRun, resolve_engine, run_windowed
 
 __all__ = [
     "MeasurementBackend",
+    "FunctionBackend",
     "SimBackend",
     "JaxBackend",
     "KernelBackend",
@@ -503,3 +504,43 @@ class KernelBackend:
 
     def default_cases(self) -> list[TestCase]:
         return [TestCase("flash_attention", s) for s in (64, 128)]
+
+
+# ---------------------------------------------------------------------------
+# Legacy-pair adapter
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FunctionBackend:
+    """Lift a bare ``(epoch_factory, measure)`` pair into the
+    :class:`MeasurementBackend` protocol.
+
+    The migration path off the deprecated legacy form of
+    :func:`~repro.core.design.run_design`: anything that could be
+    expressed as the pair is expressible as this backend, and gains what
+    the pair never had — a :class:`~repro.core.factors.FactorSet` (so
+    results can live in stores, sweeps and audits) and a ``default_cases``
+    hook. ``name`` lands in the factor set's ``measurement_backend``
+    field: give two different measurement functions two different names,
+    or their campaigns will collide on one fingerprint.
+    """
+
+    epoch_factory: Any                 # Callable[[int], Any]
+    measure_fn: Any                    # Callable[[Any, TestCase, int], array]
+    name: str = "function"
+    cases: tuple = ()
+
+    def make_epoch(self, epoch: int) -> Any:
+        return self.epoch_factory(epoch)
+
+    def measure(self, ctx: Any, case: TestCase, nrep: int) -> np.ndarray:
+        return np.asarray(self.measure_fn(ctx, case, nrep), np.float64)
+
+    def factors(self, design: ExperimentDesign) -> FactorSet:
+        return capture_factors(
+            measurement_backend=self.name,
+            **_design_factor_kw(design),
+        )
+
+    def default_cases(self) -> list[TestCase]:
+        return [TestCase(op, int(m)) for op, m in self.cases]

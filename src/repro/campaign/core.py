@@ -89,18 +89,41 @@ class Campaign:
         self.archive = archive
 
     def run(self, snapshot: StoreSnapshot | None = None,
-            on_record=None) -> CampaignResult:
+            on_record=None, epochs=None) -> CampaignResult:
         """Execute (or resume) the campaign. ``snapshot`` — a
         :meth:`~repro.campaign.ResultStore.snapshot` of the attached store
         — replaces the per-run full-file resume scan; a sweep runs many
         campaigns against one growing file and passes the one snapshot it
         took up front. ``on_record(record)`` fires after every *freshly
         measured* cell is (if a store is attached) durably appended — the
-        progress heartbeat a fleet worker's lease is kept alive by."""
+        progress heartbeat a fleet worker's lease is kept alive by.
+
+        ``epochs`` — an iterable of launch-epoch indices — restricts the
+        run to a *window* of the design's epochs (budgeted sweeps measure
+        a cell round by round). The window must stay inside
+        ``design.n_launch_epochs``: epoch count is part of the factor
+        fingerprint, so widening the design itself would silently declare
+        a different experiment. Case orders for *all* epochs are still
+        drawn up front from the design seed, which is why measuring
+        epochs ``[0,1)`` now and ``[1,3)`` later appends exactly the
+        records an uninterrupted full run would have."""
         spec, backend, store = self.spec, self.backend, self.store
         design = spec.design
         cases = list(spec.cases) or backend.default_cases()
         factors = backend.factors(design)
+
+        if epochs is None:
+            epoch_window = None
+        else:
+            epoch_window = sorted({int(e) for e in epochs})
+            bad = [e for e in epoch_window
+                   if not 0 <= e < design.n_launch_epochs]
+            if bad:
+                raise ValueError(
+                    f"Campaign: epochs {bad} outside the design's "
+                    f"0..{design.n_launch_epochs - 1} range — the epoch "
+                    "count is fingerprinted, so a wider window needs a "
+                    "new design, not a bigger window")
 
         fingerprint = None
         done: dict[tuple[str, int, int], MeasurementRecord] = {}
@@ -114,6 +137,8 @@ class Campaign:
         records: list[MeasurementRecord] = []
         n_measured = n_resumed = 0
         for epoch, order in enumerate(case_orders(design, cases)):
+            if epoch_window is not None and epoch not in epoch_window:
+                continue
             missing = [c for c in order
                        if (c.op, c.msize, epoch) not in done]
             ctx = backend.make_epoch(epoch) if missing else None

@@ -37,7 +37,14 @@ Two bookkeeping line kinds make stores safe to *archive* across time
 Fleet execution (:mod:`repro.fleet`) adds ``{"kind": "sweep-cell-failed",
 ...}`` — a *quarantine* record written when a sweep cell exhausted its
 retry budget, carrying the factor fingerprint and last error so partial
-results stay honest about what is missing. Loading skips undecodable
+results stay honest about what is missing. Budgeted sweeps
+(:mod:`repro.sweeps.alloc`) add ``{"kind": "sweep-alloc", ...}`` — one
+line per allocation *round*, recording which cells received budget, the
+epoch window measured, and the axis verdicts the policy reached on the
+data available at that look. Persisting the decisions (not just the
+measurements) is what makes a racing sweep kill/resume deterministic:
+a resumed run replays the recorded verdicts instead of re-deciding on a
+possibly-larger record set. Loading skips undecodable
 lines with a warning naming the line number and (best-effort) kind, and
 counts them in :attr:`ResultStore.n_corrupt`: a torn *tail* is the
 ordinary residue of a killed writer, a torn line *mid-file* is the
@@ -108,6 +115,7 @@ class StoreSnapshot:
     manifests: dict = field(default_factory=dict)        # id -> manifest
     sweep_cells_by_id: dict = field(default_factory=dict)  # id -> {cell: fp}
     sweep_failed_by_id: dict = field(default_factory=dict)  # id -> {cell: info}
+    sweep_alloc_by_id: dict = field(default_factory=dict)  # id -> [rounds]
     n_corrupt: int = 0             # undecodable lines skipped in this pass
 
     def completed(self, fingerprint: str) -> set:
@@ -282,6 +290,37 @@ class ResultStore:
                           cell=int(index), fingerprint=fingerprint,
                           attempts=int(attempts), error=str(error)[:500]))
 
+    def append_sweep_alloc(self, sweep_id: str, round: int, cells: list[int],
+                           epochs: tuple[int, int], decisions: dict,
+                           spent_nrep: int, policy: str) -> None:
+        """Record one completed allocation round of a budgeted sweep: the
+        cells that received budget, the launch-epoch window ``[lo, hi)``
+        measured, and the per-axis verdicts the policy reached at this
+        look. Written *after* the round's last record, so a killed sweep
+        either replays the persisted verdicts (line present) or
+        re-derives them from exactly the records the round produced (line
+        absent, measurements record-granular resumable) — both paths land
+        on the same allocation sequence."""
+        self._append(dict(
+            kind="sweep-alloc", sweep=sweep_id, round=int(round),
+            cells=[int(c) for c in cells],
+            epochs=[int(epochs[0]), int(epochs[1])],
+            decisions=_jsonable(decisions), spent_nrep=int(spent_nrep),
+            policy=str(policy)))
+
+    def sweep_allocs(self, sweep_id: str) -> list[dict]:
+        """Allocation-round lines of a sweep, ordered by round index.
+
+        Duplicate round indices keep the *first* occurrence: a resumed
+        run that re-appended an identical line (crash between append and
+        the next read) must not shadow the decision the original run
+        acted on."""
+        rounds: dict[int, dict] = {}
+        for o in self._lines():
+            if o.get("kind") == "sweep-alloc" and o["sweep"] == sweep_id:
+                rounds.setdefault(int(o["round"]), o)
+        return [rounds[k] for k in sorted(rounds)]
+
     def sweep_cells_failed(self, sweep_id: str) -> dict[int, dict]:
         """``cell index -> quarantine info`` of every quarantined cell.
 
@@ -351,6 +390,12 @@ class ResultStore:
                         fingerprint=o["fingerprint"],
                         attempts=int(o.get("attempts", 0)),
                         error=o.get("error", ""))
+            elif kind == "sweep-alloc":
+                rounds = snap.sweep_alloc_by_id.setdefault(o["sweep"], [])
+                if not any(int(r["round"]) == int(o["round"])
+                           for r in rounds):
+                    rounds.append(o)
+                    rounds.sort(key=lambda r: int(r["round"]))
         snap.n_corrupt = self.n_corrupt
         return snap
 

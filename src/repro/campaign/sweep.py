@@ -22,6 +22,18 @@ cells load instead of re-measuring), and in the serial path a cell that
 was itself killed mid-campaign additionally resumes at *record*
 granularity through the normal campaign resume. Sharded workers measure
 whole cells and the parent persists each cell the moment it completes.
+
+With an :class:`~repro.sweeps.alloc.AllocationPolicy` attached
+(``policy=``), the scheduler runs *budgeted*: the policy plans rounds —
+a launch-epoch window over the currently surviving cells — and after
+each round decides, on the accumulated data, which factor axes are
+resolved (MATTERS or null) and can stop receiving budget. Rounds execute
+through the same ``_execute_pending`` hook as everything else (so the
+fleet's lease queue gets rounds of leased work for free), each round's
+verdicts are persisted as a ``sweep-alloc`` line, and a cell's
+``sweep-cell`` marker is written only when the *allocation* finishes —
+for a budgeted sweep the marker means "the policy is done with this
+cell", which may be well short of the design's full epoch count.
 """
 
 from __future__ import annotations
@@ -77,11 +89,11 @@ class SweepResult:
     meta: dict = field(default_factory=dict)
 
 
-def _run_cell(backend, cases, design, name) -> CampaignResult:
+def _run_cell(backend, cases, design, name, epochs=None) -> CampaignResult:
     """Measure one grid cell in a worker process. No store attached — the
     parent persists each finished cell (one writer per JSONL file)."""
     return Campaign(CampaignSpec(list(cases), design, name=name),
-                    backend).run()
+                    backend).run(epochs=epochs)
 
 
 class SweepScheduler:
@@ -91,14 +103,30 @@ class SweepScheduler:
     runs its cell's launch epochs serially); the parent appends finished
     cells to the store as they complete, so even a killed sharded sweep
     keeps every completed cell.
+
+    ``policy`` — an :class:`~repro.sweeps.alloc.AllocationPolicy`
+    instance or registry name (``"uniform"``, ``"racing"``,
+    ``"successive_halving"``) — switches :meth:`run` to the budgeted
+    round loop. A store is then required: the round decisions must
+    persist for kill/resume to replay them.
     """
 
     def __init__(self, spec: SweepSpec, backend,
-                 store: ResultStore | None = None, n_workers: int = 1):
+                 store: ResultStore | None = None, n_workers: int = 1,
+                 policy=None):
+        if isinstance(policy, str):
+            from repro.sweeps.alloc import make_policy
+            policy = make_policy(policy)
         self.spec = spec
         self.backend = backend
         self.store = store
         self.n_workers = max(1, int(n_workers))
+        self.policy = policy
+        #: the launch-epoch window ``(lo, hi)`` of the budgeted round being
+        #: executed, or ``None`` outside one. Execution paths consult it to
+        #: window their campaigns and to *suppress* ``sweep-cell`` markers
+        #: (a cell is not complete just because one round touched it).
+        self._round_epochs: tuple[int, int] | None = None
 
     # -- compilation -------------------------------------------------------
 
@@ -129,6 +157,8 @@ class SweepScheduler:
     # -- execution ---------------------------------------------------------
 
     def run(self) -> SweepResult:
+        if self.policy is not None:
+            return self._run_adaptive()
         spec, store = self.spec, self.store
         compiled = self.compile()
 
@@ -174,6 +204,145 @@ class SweepScheduler:
                       axes=[ax.name for ax in spec.grid.axes],
                       n_workers=self.n_workers),
         )
+
+    def _run_adaptive(self) -> SweepResult:
+        """The budgeted round loop: plan → execute → look → persist.
+
+        Every round executes through :meth:`_execute_pending` (the same
+        hook the fleet overrides), restricted to the plan's cells and
+        epoch window; measurement resume is *record*-granular, so a round
+        interrupted anywhere picks up exactly where it died. After each
+        round the policy looks at a fresh store snapshot and its verdicts
+        are appended as a ``sweep-alloc`` line — unless that round's line
+        already exists (a killed run being resumed), in which case the
+        persisted verdicts are replayed instead of re-deciding on what
+        might by now be a larger record set. Since policies are pure
+        functions of the observed records, both paths produce the same
+        allocation sequence — which is what keeps fleet == serial
+        bit-identity and the kill/resume property intact under racing.
+        """
+        from dataclasses import asdict
+
+        from repro.sweeps.alloc import build_state
+
+        spec, store, policy = self.spec, self.store, self.policy
+        if store is None:
+            raise ValueError(
+                "budgeted sweeps need a store: allocation rounds persist "
+                "their decisions as sweep-alloc lines (pass store=)")
+        if not spec.cases:
+            raise ValueError(
+                "budgeted sweeps need an explicit case list — round "
+                "completeness is undecidable without it")
+        compiled = self.compile()
+        by_index = {entry[0].index: entry for entry in compiled}
+        n_epochs_max = spec.design.n_launch_epochs
+
+        snapshot = store.snapshot()
+        manifest = dict(
+            spec.grid.manifest(), name=spec.name,
+            cases=[[c.op, int(c.msize)] for c in spec.cases],
+            cells=[[cell.index, fp, cell.levels()]
+                   for cell, _, _, _, fp in compiled],
+            policy=policy.manifest(),
+        )
+        sweep_id = store.append_sweep(manifest, snapshot=snapshot)
+
+        fresh: set[int] = set()        # cells with new records this run
+        rounds: list[dict] = []
+        while True:
+            state = build_state(manifest, snapshot, sweep_id, n_epochs_max,
+                                spec.design.outlier_filter)
+            plan = policy.plan_round(state)
+            if plan is None:
+                break
+            lo, hi = plan.epochs
+            quarantined = snapshot.sweep_failed_by_id.get(sweep_id, {})
+            window = {(c.op, int(c.msize), e)
+                      for c in spec.cases for e in range(lo, hi)}
+            pending = [by_index[i] for i in plan.cells
+                       if i in by_index and i not in quarantined
+                       and not window <= snapshot.completed(by_index[i][4])]
+            if pending:
+                self._round_epochs = (lo, hi)
+                try:
+                    measured = self._execute_pending(pending, sweep_id,
+                                                     snapshot)
+                finally:
+                    self._round_epochs = None
+                fresh.update(i for i, r in measured.items() if r.n_measured)
+            # decide on a *fresh* snapshot: round execution (serial
+            # campaigns, fleet shard merges) appends records the in-memory
+            # snapshot does not fully track
+            snapshot = store.snapshot()
+            persisted = snapshot.sweep_alloc_by_id.get(sweep_id, [])
+            if plan.round >= len(persisted):
+                state = build_state(manifest, snapshot, sweep_id,
+                                    n_epochs_max,
+                                    spec.design.outlier_filter)
+                decisions = policy.decide(state)
+                store.append_sweep_alloc(
+                    sweep_id, plan.round, list(plan.cells), (lo, hi),
+                    {a: asdict(d) for a, d in decisions.items()},
+                    state.spent_nrep, policy.name)
+                snapshot.sweep_alloc_by_id.setdefault(sweep_id, []).append(
+                    dict(kind="sweep-alloc", sweep=sweep_id,
+                         round=plan.round, cells=list(plan.cells),
+                         epochs=[lo, hi],
+                         decisions={a: asdict(d)
+                                    for a, d in decisions.items()},
+                         spent_nrep=state.spent_nrep, policy=policy.name))
+            rounds.append(dict(round=plan.round, epochs=[lo, hi],
+                               n_cells=len(plan.cells)))
+
+        # `state` is the snapshot-fresh view the loop broke on
+        failed = snapshot.sweep_failed_by_id.get(sweep_id, {})
+        marked = snapshot.sweep_cells_by_id.get(sweep_id, {})
+        cells_out: list[CellResult] = []
+        for cell, backend, design, factors, fp in compiled:
+            records = snapshot.records.get(fp, [])
+            if not records or cell.index in failed:
+                continue               # quarantined (or never measured)
+            if cell.index not in marked:
+                # allocation finished with this cell — marker written now,
+                # not per round, so a killed budgeted sweep never claims a
+                # cell the policy might still have extended
+                store.append_sweep_cell(sweep_id, cell.index, fp)
+                marked[cell.index] = fp
+            cells_out.append(CellResult(
+                cell=cell, factors=factors, fingerprint=fp,
+                table=analyze_records(records, design.outlier_filter),
+                n_measured=len(records) if cell.index in fresh else 0,
+                n_resumed=0 if cell.index in fresh else len(records)))
+
+        design = spec.design
+        uniform_nrep = None
+        if not design.adaptive:
+            uniform_nrep = (len(compiled) * len(spec.cases)
+                            * n_epochs_max * design.nrep)
+        savings = (uniform_nrep / state.spent_nrep
+                   if uniform_nrep and state.spent_nrep else None)
+        alloc = dict(
+            policy=policy.name, policy_params=policy.manifest(),
+            n_rounds=state.round, rounds=rounds,
+            spent_nrep=state.spent_nrep, uniform_nrep=uniform_nrep,
+            savings=savings, decisions=dict(state.decided),
+            undecided=state.undecided())
+        return SweepResult(
+            cells=cells_out, sweep_id=sweep_id,
+            n_cells_measured=sum(1 for c in cells_out if c.n_measured),
+            n_cells_resumed=sum(1 for c in cells_out if not c.n_measured),
+            meta=dict(name=spec.name, n_cells=len(cells_out),
+                      axes=[ax.name for ax in spec.grid.axes],
+                      n_workers=self.n_workers, alloc=alloc),
+        )
+
+    def _epoch_window(self):
+        """The epoch iterable campaigns should run under — the budgeted
+        round's window, or ``None`` (all epochs) outside one."""
+        if self._round_epochs is None:
+            return None
+        return range(self._round_epochs[0], self._round_epochs[1])
 
     def _execute_pending(self, pending, sweep_id,
                          snapshot) -> dict[int, CellResult]:
@@ -227,8 +396,9 @@ class SweepScheduler:
                     n_resumed=len(records))
                 continue
             res = Campaign(self.spec.cell_spec(cell, design), backend,
-                           self.store).run(snapshot=snapshot)
-            if self.store is not None:
+                           self.store).run(snapshot=snapshot,
+                                           epochs=self._epoch_window())
+            if self.store is not None and self._round_epochs is None:
                 self.store.append_sweep_cell(sweep_id, cell.index, fp)
             out[cell.index] = CellResult(
                 cell=cell, factors=factors, fingerprint=fp, table=res.table,
@@ -258,14 +428,16 @@ class SweepScheduler:
                     # the serial fallback must see these cells as done
                     # rather than re-measure and duplicate their records
                     snapshot.records.setdefault(fp, []).append(rec)
-            store.append_sweep_cell(sweep_id, cell.index, fp)
-            snapshot.sweep_cells_by_id.setdefault(sweep_id,
-                                                  {})[cell.index] = fp
+            if self._round_epochs is None:
+                store.append_sweep_cell(sweep_id, cell.index, fp)
+                snapshot.sweep_cells_by_id.setdefault(sweep_id,
+                                                      {})[cell.index] = fp
 
+        window = self._epoch_window()
         rets = map_parallel(
             _run_cell,
             [(backend, spec.cases, design,
-              spec.cell_spec(cell, design).name)
+              spec.cell_spec(cell, design).name, window)
              for cell, backend, design, _, _ in pending],
             self.n_workers, what="sweep cells", on_result=persist)
         if rets is None:

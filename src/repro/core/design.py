@@ -50,7 +50,32 @@ __all__ = [
     "run_design",
     "map_parallel",
     "analyze_records",
+    "NREP_SPENT",
 ]
+
+
+class _NrepCounter:
+    """Process-global measurement-cost meter: every repetition measured
+    through :func:`measure_case` is counted, whatever layer asked for it.
+    Wall-clock seconds depend on the machine; *repetitions spent* is the
+    machine-independent cost a budgeted sweep actually saves — the
+    benchmark harness snapshots this around each bench to report
+    ``nrep_total`` next to seconds."""
+
+    __slots__ = ("total",)
+
+    def __init__(self) -> None:
+        self.total = 0
+
+    def add(self, n: int) -> None:
+        self.total += int(n)
+
+    def read(self) -> int:
+        return self.total
+
+
+#: The process-wide repetition counter (see :class:`_NrepCounter`).
+NREP_SPENT = _NrepCounter()
 
 
 @dataclass(frozen=True)
@@ -221,9 +246,12 @@ def measure_case(
 ) -> tuple[np.ndarray, dict]:
     """Measure one case under the design's nrep policy (fixed or adaptive)."""
     if design.adaptive:
-        return measure_adaptive(measure, ctx, case, design)
-    times = np.asarray(measure(ctx, case, design.nrep), dtype=np.float64)
-    return times, dict(nrep_used=int(times.size), converged=True)
+        times, meta = measure_adaptive(measure, ctx, case, design)
+    else:
+        times = np.asarray(measure(ctx, case, design.nrep), dtype=np.float64)
+        meta = dict(nrep_used=int(times.size), converged=True)
+    NREP_SPENT.add(times.size)
+    return times, meta
 
 
 def _measure_epoch(
@@ -262,8 +290,15 @@ def case_orders(design: ExperimentDesign,
 
 def _as_backend_pair(backend_or_factory, measure):
     """Accept either a :class:`~repro.campaign.MeasurementBackend` (has
-    ``make_epoch`` + ``measure``) or the legacy ``(epoch_factory, measure)``
-    pair; return the pair."""
+    ``make_epoch`` + ``measure``) or the **deprecated** legacy
+    ``(epoch_factory, measure)`` pair; return the pair.
+
+    The backend protocol is the single entry point: it carries factor
+    capture, default cases and provenance that the bare pair cannot, so
+    results measured through a pair are second-class citizens in every
+    layer above (stores, sweeps, audits). Wrap a pair in
+    :class:`~repro.campaign.FunctionBackend` instead.
+    """
     if measure is None:
         if not (hasattr(backend_or_factory, "make_epoch")
                 and hasattr(backend_or_factory, "measure")):
@@ -271,6 +306,11 @@ def _as_backend_pair(backend_or_factory, measure):
                 "run_design: pass a MeasurementBackend, or an epoch_factory "
                 "together with a measure callable")
         return backend_or_factory.make_epoch, backend_or_factory.measure
+    warnings.warn(
+        "run_design(epoch_factory, measure) is deprecated; wrap the pair "
+        "in repro.campaign.FunctionBackend (the MeasurementBackend "
+        "protocol is the single entry point)",
+        DeprecationWarning, stacklevel=3)
     return backend_or_factory, measure
 
 

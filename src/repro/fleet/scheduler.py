@@ -86,14 +86,15 @@ class FleetSweepResult(SweepResult):
 
 
 def _fleet_worker(backend, cases, design, name, shard_path, hb_path,
-                  plan, cell_index, attempt):
+                  plan, cell_index, attempt, epochs=None):
     """One claimed cell, one process, one private shard store.
 
-    Runs the cell as an ordinary campaign against the shard; touches the
-    heartbeat file after every durable record append. On any failure the
-    error lands in ``<shard>.err`` and the process exits nonzero — the
-    parent discards the shard either way, so a worker never has to clean
-    up after itself (and an injected hard crash *cannot*).
+    Runs the cell as an ordinary campaign against the shard (``epochs``
+    windows it to a budgeted round's slice); touches the heartbeat file
+    after every durable record append. On any failure the error lands in
+    ``<shard>.err`` and the process exits nonzero — the parent discards
+    the shard either way, so a worker never has to clean up after itself
+    (and an injected hard crash *cannot*).
     """
     try:
         if plan is not None and plan.any_faults():
@@ -107,7 +108,7 @@ def _fleet_worker(backend, cases, design, name, shard_path, hb_path,
             hb.touch()
 
         Campaign(CampaignSpec(list(cases), design, name=name),
-                 backend, store).run(on_record=beat)
+                 backend, store).run(on_record=beat, epochs=epochs)
         os._exit(0)
     except BaseException as e:   # noqa: BLE001 — the report IS the handling
         try:
@@ -134,14 +135,14 @@ class FleetScheduler(SweepScheduler):
     """
 
     def __init__(self, spec: SweepSpec, backend, store: ResultStore,
-                 config: FleetConfig | None = None):
+                 config: FleetConfig | None = None, policy=None):
         if store is None:
             raise ValueError("FleetScheduler: a store is required — lease "
                              "recovery and shard federation are meaningless "
                              "without durable results")
         self.config = config or FleetConfig()
         super().__init__(spec, backend, store,
-                         n_workers=self.config.n_workers)
+                         n_workers=self.config.n_workers, policy=policy)
         self._quarantined: dict[int, dict] = {}
         self._queue_stats: dict = {}
         self._n_corrupt_shard_lines = 0
@@ -183,7 +184,11 @@ class FleetScheduler(SweepScheduler):
             out = self._drive_inprocess(queue, pending, sweep_id, snapshot)
         else:
             out = self._drive_fleet(queue, pending, sweep_id, snapshot)
-        self._queue_stats = queue.stats()
+        # a budgeted sweep calls this hook once per allocation round —
+        # accumulate, so the final stats cover every leased work item
+        # (the same cell leased in two rounds counts as two items)
+        for k, v in queue.stats().items():
+            self._queue_stats[k] = self._queue_stats.get(k, 0) + v
         return out
 
     # -- in-process mode ----------------------------------------------------
@@ -210,7 +215,7 @@ class FleetScheduler(SweepScheduler):
                 # no store attached: an attempt is all-or-nothing, so a
                 # crash mid-cell leaves nothing to mis-resume from
                 res = Campaign(self.spec.cell_spec(cell, design),
-                               backend).run()
+                               backend).run(epochs=self._epoch_window())
             except Exception as e:   # injected or genuine — same contract
                 self._fail(queue, task, sweep_id, snapshot,
                            f"{type(e).__name__}: {e}")
@@ -236,8 +241,10 @@ class FleetScheduler(SweepScheduler):
                 store.append_record(fp, rec)
                 snapshot.records.setdefault(fp, []).append(rec)
                 n_new += 1
-        store.append_sweep_cell(sweep_id, cell.index, fp)
-        snapshot.sweep_cells_by_id.setdefault(sweep_id, {})[cell.index] = fp
+        if self._round_epochs is None:
+            store.append_sweep_cell(sweep_id, cell.index, fp)
+            snapshot.sweep_cells_by_id.setdefault(sweep_id,
+                                                  {})[cell.index] = fp
         records = snapshot.records.get(fp, [])
         return CellResult(cell=cell, factors=factors, fingerprint=fp,
                           table=analyze_records(records,
@@ -332,7 +339,8 @@ class FleetScheduler(SweepScheduler):
             target=_fleet_worker,
             args=(backend, self.spec.cases, design,
                   self.spec.cell_spec(cell, design).name, str(shard),
-                  str(hb), self.config.faults, cell.index, task.attempts),
+                  str(hb), self.config.faults, cell.index, task.attempts,
+                  self._epoch_window()),
             daemon=True)
         proc.start()
         return dict(proc=proc, shard=shard, hb=hb, err=err,
@@ -354,16 +362,19 @@ class FleetScheduler(SweepScheduler):
             warnings.simplefilter("always")   # shard corruption is counted,
             ssnap = shard.snapshot()          # not raised, below
         if self.spec.cases:
+            window = self._epoch_window() or range(design.n_launch_epochs)
             expected = {(c.op, int(c.msize), e) for c in self.spec.cases
-                        for e in range(design.n_launch_epochs)}
+                        for e in window}
             if not expected <= ssnap.completed(fp):
                 return None, ("worker exited cleanly but its shard is "
                               f"missing {len(expected - ssnap.completed(fp))} "
                               "of the cell's records")
         stats = merge_stores(self.store, [shard], snapshot=snapshot)
         self._n_corrupt_shard_lines += ssnap.n_corrupt
-        self.store.append_sweep_cell(sweep_id, cell.index, fp)
-        snapshot.sweep_cells_by_id.setdefault(sweep_id, {})[cell.index] = fp
+        if self._round_epochs is None:
+            self.store.append_sweep_cell(sweep_id, cell.index, fp)
+            snapshot.sweep_cells_by_id.setdefault(sweep_id,
+                                                  {})[cell.index] = fp
         records = snapshot.records.get(fp, [])
         res = CellResult(cell=cell, factors=factors, fingerprint=fp,
                          table=analyze_records(records,

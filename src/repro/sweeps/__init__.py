@@ -18,9 +18,13 @@ interaction screen). ::
     print(format_factor_report(main_effects(cells_from_result(res))))
 """
 
+from .alloc import (POLICIES, AllocationPolicy, AllocState, RacingPolicy,
+                    RoundPlan, SuccessiveHalvingPolicy, UniformPolicy,
+                    make_policy)
 from .axes import (DEFAULT_SWEEP_AXES, MISTUNED_PER_OP_KW, default_sim_sweep,
                    sim_axes)
-from .effects import (AxisEffect, CellData, InteractionEffect, PairEffect,
+from .effects import (AxisDecision, AxisEffect, CellData, InteractionEffect,
+                      PairEffect, alpha_spending, axis_decisions,
                       cells_from_result, cells_from_store,
                       format_factor_report, interaction_screen, main_effects)
 
@@ -32,10 +36,21 @@ __all__ = [
     "CellData",
     "PairEffect",
     "AxisEffect",
+    "AxisDecision",
     "InteractionEffect",
     "cells_from_result",
     "cells_from_store",
     "main_effects",
+    "axis_decisions",
+    "alpha_spending",
     "interaction_screen",
     "format_factor_report",
+    "AllocationPolicy",
+    "AllocState",
+    "RoundPlan",
+    "UniformPolicy",
+    "RacingPolicy",
+    "SuccessiveHalvingPolicy",
+    "POLICIES",
+    "make_policy",
 ]

@@ -38,10 +38,13 @@ __all__ = [
     "CellData",
     "PairEffect",
     "AxisEffect",
+    "AxisDecision",
     "InteractionEffect",
     "cells_from_result",
     "cells_from_store",
     "main_effects",
+    "axis_decisions",
+    "alpha_spending",
     "interaction_screen",
     "format_factor_report",
 ]
@@ -204,6 +207,42 @@ def _aligned_level_pools(pools, axis: str) -> dict[str, np.ndarray]:
     return {lab: np.concatenate(v) for lab, v in grouped.items() if v}
 
 
+def _axis_effect(pools, axis: str, alpha: float) -> AxisEffect:
+    """The raw (un-Holm'd) main effect of one axis on aligned pools —
+    shared by the one-shot report (:func:`main_effects`) and the
+    sequential looks (:func:`axis_decisions`), so a budgeted sweep's
+    verdicts come from exactly the statistic the final table prints."""
+    by_level = _aligned_level_pools(pools, axis)
+    labels = list(by_level)
+    if len(labels) < 2:
+        # fractional sampling can starve an axis down to one level;
+        # skipping it silently would misreport the swept space
+        raise ValueError(f"axis {axis!r} has a single level in the "
+                         "analyzed cells — grid fraction too small")
+    h, p_kw = kruskal_wallis([by_level[lab] for lab in labels])
+    medians = {lab: float(np.median(by_level[lab])) for lab in labels}
+    pairs: list[PairEffect] = []
+    for i in range(len(labels)):
+        for j in range(i + 1, len(labels)):
+            a, b = labels[i], labels[j]
+            slower, faster = (a, b) if medians[a] >= medians[b] else (b, a)
+            res = wilcoxon_rank_sum(by_level[slower], by_level[faster],
+                                    alternative="greater")
+            pairs.append(PairEffect(
+                slower=slower, faster=faster, p_wilcoxon=res.p_value,
+                p_holm=1.0,
+                delta=cliffs_delta(by_level[slower], by_level[faster])))
+    for pair, adj in zip(pairs, holm_bonferroni(
+            [p.p_wilcoxon for p in pairs])):
+        pair.p_holm = float(adj)
+    return AxisEffect(
+        axis=axis,
+        levels=tuple(sorted(labels, key=lambda L: -medians[L])),
+        level_medians=medians, h_stat=h, p_kw=p_kw, pairs=pairs,
+        effect_size=max(abs(p.delta) for p in pairs),
+        n_obs=sum(v.size for v in by_level.values()), alpha=alpha)
+
+
 def main_effects(cells: list[CellData], alpha: float = 0.05) -> list[AxisEffect]:
     """Per-axis main effects on aligned observations, ranked
     most-impactful first.
@@ -213,41 +252,91 @@ def main_effects(cells: list[CellData], alpha: float = 0.05) -> list[AxisEffect]
     of :func:`format_factor_report`.
     """
     pools = _normalized_pools(cells)
-    effects: list[AxisEffect] = []
-    for axis in _axis_names(cells):
-        by_level = _aligned_level_pools(pools, axis)
-        labels = list(by_level)
-        if len(labels) < 2:
-            # fractional sampling can starve an axis down to one level;
-            # skipping it silently would misreport the swept space
-            raise ValueError(f"axis {axis!r} has a single level in the "
-                             "analyzed cells — grid fraction too small")
-        h, p_kw = kruskal_wallis([by_level[lab] for lab in labels])
-        medians = {lab: float(np.median(by_level[lab])) for lab in labels}
-        pairs: list[PairEffect] = []
-        for i in range(len(labels)):
-            for j in range(i + 1, len(labels)):
-                a, b = labels[i], labels[j]
-                slower, faster = (a, b) if medians[a] >= medians[b] else (b, a)
-                res = wilcoxon_rank_sum(by_level[slower], by_level[faster],
-                                        alternative="greater")
-                pairs.append(PairEffect(
-                    slower=slower, faster=faster, p_wilcoxon=res.p_value,
-                    p_holm=1.0,
-                    delta=cliffs_delta(by_level[slower], by_level[faster])))
-        for pair, adj in zip(pairs, holm_bonferroni(
-                [p.p_wilcoxon for p in pairs])):
-            pair.p_holm = float(adj)
-        effects.append(AxisEffect(
-            axis=axis,
-            levels=tuple(sorted(labels, key=lambda L: -medians[L])),
-            level_medians=medians, h_stat=h, p_kw=p_kw, pairs=pairs,
-            effect_size=max(abs(p.delta) for p in pairs),
-            n_obs=sum(v.size for v in by_level.values()), alpha=alpha))
+    effects = [_axis_effect(pools, axis, alpha) for axis in _axis_names(cells)]
     for eff, adj in zip(effects, holm_bonferroni([e.p_kw for e in effects])):
         eff.p_holm = float(adj)
     effects.sort(key=lambda e: (not e.significant, -e.effect_size))
     return effects
+
+
+@dataclass(frozen=True)
+class AxisDecision:
+    """The sequential verdict on one axis at one *look* of a budgeted
+    sweep: ``MATTERS`` (Holm-corrected effect confirmed at this look's
+    spent alpha), ``null`` (enough data, effect too small to chase), or
+    ``undecided`` (keep allocating budget to this axis)."""
+
+    axis: str
+    verdict: str                   # "MATTERS" | "null" | "undecided"
+    p_holm: float                  # Holm-adjusted within the tested family
+    effect_size: float             # max |Cliff's delta| over level pairs
+    n_obs: int
+    look: int
+    alpha_spent: float             # the threshold this look tested against
+    forced: bool = False           # retired by a halving rule, not the test
+
+    @property
+    def resolved(self) -> bool:
+        return self.verdict != "undecided"
+
+
+def alpha_spending(alpha: float, look: int) -> float:
+    """Geometric alpha-spending schedule: look *k* (0-based) may spend
+    ``alpha * 2**-(k+1)``. The spends sum to at most ``alpha`` over any
+    number of looks, so peeking at the data every round — the whole point
+    of a racing sweep — cannot inflate the family-wise false-MATTERS
+    rate above the one-shot analysis' bound. The price is conservatism,
+    paid mostly at early looks where the savings are largest anyway."""
+    return alpha * 0.5 ** (look + 1)
+
+
+def axis_decisions(cells: list[CellData], axes: list[str] | None = None,
+                   alpha: float = 0.05, look: int = 0,
+                   n_min_null: int = 24,
+                   delta_null: float = 0.3) -> dict[str, AxisDecision]:
+    """Anytime-valid early-stop check: test the (still-undecided) axis
+    family on the data available now, spending :func:`alpha_spending`
+    of the alpha budget at this look.
+
+      * ``MATTERS`` — the axis' Holm-adjusted Kruskal-Wallis p (adjusted
+        within the *tested* family, i.e. the axes passed in) clears the
+        spent alpha. Valid at any look; the spending schedule keeps the
+        overall false-MATTERS rate <= alpha.
+      * ``null`` — a futility rule, not a significance test: at least
+        ``n_min_null`` aligned observations and a maximal |Cliff's
+        delta| below ``delta_null`` means the effect, if any, is too
+        small to change the factor ranking — stop spending budget on it.
+      * ``undecided`` — neither; the axis keeps its budget.
+
+    Decisions are a pure function of ``(cells, axes, parameters)`` — no
+    RNG, no clock — which is what lets a killed sweep replay them from
+    the store and land on the identical allocation sequence.
+    """
+    pools = _normalized_pools(cells)
+    names = _axis_names(cells)
+    if axes is not None:
+        missing = sorted(set(axes) - set(names))
+        if missing:
+            raise ValueError(f"axes {missing} not present in the cells "
+                             f"(have {names})")
+        names = [n for n in names if n in set(axes)]
+    a_k = alpha_spending(alpha, look)
+    effects = [_axis_effect(pools, axis, alpha) for axis in names]
+    adjusted = holm_bonferroni([e.p_kw for e in effects])
+    out: dict[str, AxisDecision] = {}
+    for eff, p_holm in zip(effects, adjusted):
+        p_holm = float(p_holm)
+        if p_holm <= a_k:
+            verdict = "MATTERS"
+        elif eff.n_obs >= n_min_null and eff.effect_size < delta_null:
+            verdict = "null"
+        else:
+            verdict = "undecided"
+        out[eff.axis] = AxisDecision(
+            axis=eff.axis, verdict=verdict, p_holm=p_holm,
+            effect_size=eff.effect_size, n_obs=eff.n_obs, look=look,
+            alpha_spent=a_k)
+    return out
 
 
 def interaction_screen(cells: list[CellData]) -> list[InteractionEffect]:

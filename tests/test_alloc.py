@@ -1,0 +1,302 @@
+"""Budgeted sweep allocation (repro.sweeps.alloc): policy unit behavior,
+the determinism/prefix properties the resume machinery leans on, and the
+end-to-end contract — a racing sweep must land the same factor verdicts
+as the uniform reference at a real nrep saving, serially, on a fleet,
+and across a mid-allocation kill/resume.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.campaign import ResultStore, SweepScheduler
+from repro.fleet import FleetConfig, FleetScheduler
+from repro.sweeps import (AllocState, CellData, RacingPolicy, RoundPlan,
+                          SuccessiveHalvingPolicy, UniformPolicy,
+                          cells_from_result, default_sim_sweep, main_effects,
+                          make_policy)
+
+SMOKE_AXES = ("tuning", "dtype")
+
+
+# ---------------------------------------------------------------------------
+# synthetic driver: the scheduler loop without any scheduler
+# ---------------------------------------------------------------------------
+
+_LEVELS = ("x", "y")
+
+
+def _synth_value(seed, cell, epoch, loud):
+    """Deterministic per-(cell, epoch) observation; ``loud`` cells carry
+    a large injected effect."""
+    rng = np.random.default_rng([int(seed), int(cell), int(epoch)])
+    return 1.0 + (1.0 if loud else 0.0) + float(rng.normal(0.0, 0.05))
+
+
+def _drive(policy, seed, n_axes=2, n_epochs_max=8, nrep=10,
+           loud_axis=None):
+    """Run the allocation loop against synthetic data: returns the list
+    of executed RoundPlans and the final decided map. Pure in
+    ``(policy, seed, ...)`` — no store, no scheduler, no wall clock."""
+    axes = [dict(name=f"a{i}", labels=list(_LEVELS)) for i in range(n_axes)]
+    n_cells = 2 ** n_axes
+    cell_levels = {
+        c: {f"a{i}": _LEVELS[(c >> i) & 1] for i in range(n_axes)}
+        for c in range(n_cells)}
+    measured = {c: {} for c in range(n_cells)}   # cell -> {epoch: median}
+
+    def _state(decided, rnd, spent):
+        cells = []
+        for c in range(n_cells):
+            if not measured[c]:
+                continue
+            vals = np.array([measured[c][e] for e in sorted(measured[c])])
+            cells.append(CellData(index=c, levels=dict(cell_levels[c]),
+                                  medians={("op", 1): vals}))
+        return AllocState(axes=[dict(a, labels=list(a["labels"]))
+                                for a in axes],
+                          cell_levels={k: dict(v)
+                                       for k, v in cell_levels.items()},
+                          cells=cells, decided=dict(decided), round=rnd,
+                          spent_nrep=spent, n_epochs_max=n_epochs_max)
+
+    decided, rnd, spent, plans = {}, 0, 0, []
+    while True:
+        plan = policy.plan_round(_state(decided, rnd, spent))
+        if plan is None:
+            break
+        plans.append(plan)
+        for c in plan.cells:
+            for e in range(*plan.epochs):
+                loud = (loud_axis is not None
+                        and cell_levels[c][loud_axis] == _LEVELS[1])
+                measured[c][e] = _synth_value(seed, c, e, loud)
+        spent += plan.n_cell_epochs() * nrep
+        rnd += 1
+        for axis, d in policy.decide(_state(decided, rnd, spent)).items():
+            if d.resolved and axis not in decided:
+                decided[axis] = d.verdict
+    return plans, decided
+
+
+# ---------------------------------------------------------------------------
+# policy unit behavior
+# ---------------------------------------------------------------------------
+
+def test_uniform_policy_is_one_full_round():
+    plans, decided = _drive(UniformPolicy(), seed=0, loud_axis="a0")
+    assert len(plans) == 1
+    assert plans[0] == RoundPlan(round=0, epochs=(0, 8),
+                                 cells=tuple(range(4)))
+    assert decided.get("a0") == "MATTERS"
+
+
+def test_racing_windows_grow_geometrically_and_pin_decided_axes():
+    pol = RacingPolicy(n_min_null=6)
+    plans, decided = _drive(pol, seed=0, loud_axis="a0", nrep=10)
+    # contiguous geometric windows: cumulative epoch edges 1, 2, 4, 8
+    assert [p.epochs for p in plans] == \
+        [(0, 1), (1, 2), (2, 4), (4, 8)][:len(plans)]
+    assert decided == {"a0": "MATTERS", "a1": "null"}
+    # a decided axis is pinned at its reference level in every later round
+    shrunk = [p for p in plans if len(p.cells) < 4]
+    assert shrunk, "no round ever dropped a cell"
+    for p in shrunk:
+        for c in p.cells:
+            assert c in (0, 1, 2, 3)
+        # cells surviving a shrink agree on the pinned axis level
+        assert len(p.cells) == 2
+    # racing spends strictly less than uniform on the same grid
+    spent = sum(p.n_cell_epochs() for p in plans)
+    assert spent < 4 * 8
+
+
+def test_racing_respects_budget_as_stop_criterion():
+    nrep = 10
+    plans, _ = _drive(RacingPolicy(nrep_budget=4 * nrep), seed=0,
+                      loud_axis="a0", nrep=nrep)
+    # round 0 costs exactly the budget -> no further rounds are planned
+    assert len(plans) == 1
+
+
+def test_successive_halving_force_retires_weakest_half():
+    # no real effect anywhere and a futility bar set out of reach: only
+    # the halving rule can retire axes, and it must mark them forced
+    pol = SuccessiveHalvingPolicy(n_min_null=10 ** 6)
+    axes = [dict(name=f"a{i}", labels=list(_LEVELS)) for i in range(2)]
+    cell_levels = {c: {f"a{i}": _LEVELS[(c >> i) & 1] for i in range(2)}
+                   for c in range(4)}
+    rng = np.random.default_rng(5)
+    cells = [CellData(index=c, levels=dict(cell_levels[c]),
+                      medians={("op", 1): 1 + rng.normal(0, .05, 6)})
+             for c in range(4)]
+    state = AllocState(axes=axes, cell_levels=cell_levels, cells=cells,
+                       decided={}, round=1, spent_nrep=0, n_epochs_max=8)
+    out = pol.decide(state)
+    forced = [a for a, d in out.items() if d.forced]
+    assert len(forced) == 1                  # weakest half of 2 axes
+    assert out[forced[0]].verdict == "null"
+    # plain racing never forces
+    assert not any(d.forced
+                   for d in RacingPolicy(n_min_null=10 ** 6)
+                   .decide(state).values())
+
+
+def test_make_policy_registry():
+    assert make_policy("racing", nrep_budget=None) == RacingPolicy()
+    assert make_policy("uniform").name == "uniform"
+    with pytest.raises(ValueError, match="unknown allocation policy"):
+        make_policy("greedy")
+    m = make_policy("successive_halving", nrep_budget=120).manifest()
+    assert m["name"] == "successive_halving" and m["nrep_budget"] == 120
+
+
+# ---------------------------------------------------------------------------
+# properties: determinism + budget-prefix (satellite #4)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10 ** 6),
+       policy_name=st.sampled_from(["uniform", "racing",
+                                    "successive_halving"]))
+def test_property_allocation_is_deterministic_in_seed_and_records(
+        seed, policy_name):
+    """Same policy + same observed records => byte-identical allocation
+    sequence and decisions (no RNG, no clock in any policy)."""
+    runs = [_drive(make_policy(policy_name, n_min_null=6)
+                   if policy_name != "uniform" else make_policy(policy_name),
+                   seed, loud_axis="a0") for _ in range(2)]
+    assert runs[0] == runs[1]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10 ** 6),
+       budget_rounds=st.integers(1, 3),
+       policy_name=st.sampled_from(["racing", "successive_halving"]))
+def test_property_raising_budget_only_extends_the_sequence(
+        seed, budget_rounds, policy_name):
+    """The budget is a stop criterion, never a decision input: the
+    allocation under a smaller budget is a strict prefix of the
+    allocation under a larger (or absent) one."""
+    nrep = 10
+
+    def run(budget):
+        return _drive(make_policy(policy_name, n_min_null=6,
+                                  nrep_budget=budget),
+                      seed, loud_axis="a0", nrep=nrep)
+
+    small_plans, _ = run(budget_rounds * 4 * nrep)
+    big_plans, _ = run(None)
+    assert len(small_plans) <= len(big_plans)
+    assert small_plans == big_plans[:len(small_plans)]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: racing == uniform verdicts, cheaper
+# ---------------------------------------------------------------------------
+
+def _verdicts(effects):
+    return {e.axis: ("MATTERS" if e.significant else "null")
+            for e in effects}
+
+
+def test_racing_sweep_matches_uniform_verdicts_at_a_saving(tmp_path):
+    spec_u, backend_u = default_sim_sweep(seed=0, axes=SMOKE_AXES,
+                                          n_launch_epochs=6, nrep=30)
+    res_u = SweepScheduler(spec_u, backend_u).run()
+    uniform_verdicts = _verdicts(main_effects(cells_from_result(res_u)))
+
+    spec_r, backend_r = default_sim_sweep(seed=0, axes=SMOKE_AXES,
+                                          n_launch_epochs=6, nrep=30)
+    store = ResultStore(tmp_path / "racing.jsonl")
+    res_r = SweepScheduler(spec_r, backend_r, store,
+                           policy=make_policy("racing")).run()
+    alloc = res_r.meta["alloc"]
+    assert alloc["decisions"] == uniform_verdicts
+    assert alloc["undecided"] == []
+    assert alloc["savings"] >= 1.4
+    assert alloc["spent_nrep"] < alloc["uniform_nrep"]
+    # the sweep-alloc trail is persisted, one line per round, in order
+    lines = store.sweep_allocs(res_r.sweep_id)
+    assert [ln["round"] for ln in lines] == list(range(alloc["n_rounds"]))
+    assert lines[-1]["spent_nrep"] == alloc["spent_nrep"]
+
+
+def test_adaptive_sweep_requires_a_store():
+    spec, backend = default_sim_sweep(seed=0, axes=SMOKE_AXES)
+    with pytest.raises(ValueError, match="store"):
+        SweepScheduler(spec, backend, policy=make_policy("racing")).run()
+
+
+# ---------------------------------------------------------------------------
+# fleet: serial identity + kill/resume byte-prefix
+# ---------------------------------------------------------------------------
+
+def _records_by_fp(store):
+    snap = store.snapshot()
+    return {fp: [(r.epoch, r.case, r.times.tobytes())
+                 for r in sorted(recs, key=lambda r: (r.epoch,
+                                                      str(r.case)))]
+            for fp, recs in snap.records.items()}
+
+
+def _alloc_trail(store, sweep_id):
+    return json.loads(json.dumps(store.sweep_allocs(sweep_id)))
+
+
+def test_fleet_racing_equals_serial(tmp_path):
+    results = {}
+    for label, n_workers in (("serial", None), ("fleet", 1)):
+        spec, backend = default_sim_sweep(seed=0, axes=SMOKE_AXES,
+                                          n_launch_epochs=6, nrep=30)
+        store = ResultStore(tmp_path / f"{label}.jsonl")
+        if n_workers is None:
+            res = SweepScheduler(spec, backend, store,
+                                 policy=make_policy("racing")).run()
+        else:
+            res = FleetScheduler(spec, backend, store,
+                                 FleetConfig(n_workers=n_workers),
+                                 policy=make_policy("racing")).run()
+        results[label] = (res, _records_by_fp(store),
+                          _alloc_trail(store, res.sweep_id))
+    (res_s, recs_s, trail_s), (res_f, recs_f, trail_f) = \
+        results["serial"], results["fleet"]
+    assert recs_s == recs_f
+    assert trail_s == trail_f
+    assert res_s.meta["alloc"]["decisions"] == \
+        res_f.meta["alloc"]["decisions"]
+    assert res_s.meta["alloc"]["spent_nrep"] == \
+        res_f.meta["alloc"]["spent_nrep"]
+
+
+def test_fleet_kill_resume_is_a_byte_prefix(tmp_path):
+    """Kill a fleet-run racing sweep at arbitrary store prefixes and
+    resume: the resumed run must reproduce the uninterrupted store's
+    records and allocation decisions exactly."""
+    def run(path):
+        spec, backend = default_sim_sweep(seed=0, axes=SMOKE_AXES,
+                                          n_launch_epochs=6, nrep=30)
+        store = ResultStore(path)
+        res = FleetScheduler(spec, backend, store, FleetConfig(n_workers=1),
+                             policy=make_policy("racing")).run()
+        return store, res
+
+    full_store, full_res = run(tmp_path / "full.jsonl")
+    full_recs = _records_by_fp(full_store)
+    full_trail = _alloc_trail(full_store, full_res.sweep_id)
+    lines = (tmp_path / "full.jsonl").read_bytes().splitlines(keepends=True)
+    assert len(lines) > 4
+    # cut after the first sweep-alloc line (mid-allocation) and at a
+    # mid-round record boundary
+    alloc_pos = next(i for i, ln in enumerate(lines)
+                     if b'"sweep-alloc"' in ln)
+    for cut in {alloc_pos + 1, max(1, len(lines) // 2)}:
+        trunc = tmp_path / f"trunc{cut}.jsonl"
+        trunc.write_bytes(b"".join(lines[:cut]))
+        store, res = run(trunc)
+        assert _records_by_fp(store) == full_recs, f"cut={cut}"
+        assert _alloc_trail(store, res.sweep_id) == full_trail, f"cut={cut}"
+        assert res.meta["alloc"]["decisions"] == \
+            full_res.meta["alloc"]["decisions"]

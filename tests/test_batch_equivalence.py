@@ -33,6 +33,7 @@ from repro.core import (
     run_windowed,
     wilcoxon_rank_sum,
 )
+from repro.campaign import FunctionBackend
 from repro.core.design import analyze_records
 from repro.core.mpi_ops import _ar1_filter
 from repro.core.window import run_windowed_scalar
@@ -410,10 +411,9 @@ class _Measure:
 def test_epoch_parallel_run_design_reproduces_serial():
     design = ExperimentDesign(n_launch_epochs=6, nrep=25, seed=3)
     cases = [TestCase("allreduce", m) for m in (256, 4096)]
-    serial = run_design(design, _EpochFactory(50), _Measure(), cases,
-                        n_workers=1)
-    parallel = run_design(design, _EpochFactory(50), _Measure(), cases,
-                          n_workers=2)
+    backend = FunctionBackend(_EpochFactory(50), _Measure(), name="sim-pair")
+    serial = run_design(design, backend, cases=cases, n_workers=1)
+    parallel = run_design(design, backend, cases=cases, n_workers=2)
     assert len(serial) == len(parallel) == 12
     for a, b in zip(serial, parallel):
         assert a.case == b.case
@@ -426,9 +426,10 @@ def test_run_design_unpicklable_falls_back_to_serial():
     cases = [TestCase("allreduce", 256)]
     factory = _EpochFactory(10)
     measure = lambda ctx, case, nrep: _Measure()(ctx, case, nrep)  # noqa: E731
+    backend = FunctionBackend(factory, measure)  # lambda => not picklable
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
-        records = run_design(design, factory, measure, cases, n_workers=2)
+        records = run_design(design, backend, cases=cases, n_workers=2)
     assert len(records) == 2
     assert any("not picklable" in str(w.message) for w in caught)
 

@@ -1,0 +1,97 @@
+"""The benchmarks.run subcommand CLI: legacy-flag shim, argv mapping,
+and the flag validation that guards the budgeted-sweep plumbing."""
+
+import json
+import warnings
+
+import pytest
+
+from benchmarks.run import SUBCOMMANDS, _legacy_argv, main
+
+
+def _map_silently(argv):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return _legacy_argv(argv)
+
+
+@pytest.mark.parametrize("argv,expected", [
+    # suite flags with no mode flag -> run subcommand
+    (["--list"], ["run", "--list"]),
+    (["--only", "micro", "--json", "f.json"],
+     ["run", "--only", "micro", "--json", "f.json"]),
+    # mode flags -> their subcommand, flag removed
+    (["--sweep", "--axes", "tuning,dtype", "--store", "s.jsonl"],
+     ["sweep", "--axes", "tuning,dtype", "--store", "s.jsonl"]),
+    (["--fleet", "3", "--sweep", "--store", "s.jsonl"],
+     ["sweep", "--fleet", "3", "--store", "s.jsonl"]),
+    (["--audit", "--archive", "runs", "--baseline", "ref"],
+     ["audit", "--archive", "runs", "--baseline", "ref"]),
+    (["--compare", "a.jsonl", "b.jsonl"], ["compare", "a.jsonl", "b.jsonl"]),
+    # guidelines: --only meant the backend there, becomes --backend
+    (["--guidelines", "--only", "kernel"],
+     ["guidelines", "--backend", "kernel"]),
+    (["--guidelines"], ["guidelines"]),
+])
+def test_legacy_argv_mapping(argv, expected):
+    assert _map_silently(argv) == expected
+
+
+def test_legacy_argv_passes_subcommands_through_unchanged():
+    for cmd in SUBCOMMANDS:
+        argv = [cmd, "--whatever", "x"]
+        # no warning and no rewrite for the modern spelling
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            assert _legacy_argv(argv) == argv
+            assert _legacy_argv([]) == ["run"]
+            assert _legacy_argv(["--help"]) == ["--help"]
+
+
+def test_legacy_argv_warns_deprecation():
+    with pytest.deprecated_call(match="subcommand form"):
+        _legacy_argv(["--list"])
+    with pytest.deprecated_call(match="python -m benchmarks.run sweep"):
+        _legacy_argv(["--sweep", "--axes", "tuning"])
+
+
+def test_legacy_invocation_still_runs(capsys):
+    with pytest.deprecated_call():
+        main(["--list"])
+    assert "bench_micro_sweeps" in capsys.readouterr().out
+
+
+def test_run_list_subcommand(capsys):
+    main(["run", "--list"])
+    out = capsys.readouterr().out
+    assert "bench_table1_variability" in out
+    assert "bench_micro_sweeps" in out
+
+
+@pytest.mark.parametrize("argv,msg", [
+    (["sweep", "--policy", "racing"], "--policy needs --store"),
+    (["sweep", "--budget", "100"], "--budget only makes sense"),
+    (["sweep", "--faults", "crash=0.5"], "--faults only makes sense"),
+    (["sweep", "--fleet", "2"], "--fleet needs --store"),
+    (["run", "--seed", "-1"], "--seed must be"),
+])
+def test_flag_validation(argv, msg, capsys):
+    with pytest.raises(SystemExit) as exc:
+        main(argv)
+    assert exc.value.code == 2
+    assert msg in capsys.readouterr().err
+
+
+def test_sweep_policy_end_to_end(tmp_path, capsys):
+    """The budgeted path through the real CLI: racing on the smoke grid,
+    verdicts JSON written, allocation summary on stderr."""
+    store = tmp_path / "s.jsonl"
+    verdicts = tmp_path / "v.json"
+    main(["sweep", "--axes", "tuning,dtype", "--store", str(store),
+          "--policy", "racing", "--verdicts", str(verdicts)])
+    err = capsys.readouterr().err
+    assert "# alloc: policy=racing" in err
+    data = json.loads(verdicts.read_text())
+    assert data["axes"]["tuning"] == "MATTERS"
+    assert data["axes"]["dtype"] == "null"
+    assert data["alloc"]["savings"] > 1.0

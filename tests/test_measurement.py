@@ -19,6 +19,7 @@ from repro.core import (
     run_design,
     run_windowed,
 )
+from repro.campaign import FunctionBackend
 
 SYNC_KW = dict(n_fitpts=200, n_exchanges=40)
 
@@ -110,8 +111,29 @@ def _sim_campaign(seed0, op_kw=None, n=12, nrep=60):
         return times if times.size else wr.times
 
     design = ExperimentDesign(n_launch_epochs=n, nrep=nrep, seed=seed0)
-    records = run_design(design, epoch_factory, measure, cases)
+    backend = FunctionBackend(epoch_factory, measure, name="sim-pair")
+    records = run_design(design, backend, cases=cases)
     return analyze_records(records)
+
+
+def test_legacy_pair_form_of_run_design_is_deprecated():
+    """The bare (epoch_factory, measure) pair still runs — behind a
+    DeprecationWarning pointing at FunctionBackend."""
+    def epoch_factory(epoch):
+        return epoch
+
+    def measure(ctx, case, nrep):
+        return np.full(nrep, 1e-6 * (1 + ctx))
+
+    design = ExperimentDesign(n_launch_epochs=2, nrep=4, seed=0)
+    cases = [TestCase("op", 1)]
+    with pytest.deprecated_call(match="FunctionBackend"):
+        legacy = run_design(design, epoch_factory, measure, cases)
+    modern = run_design(design, FunctionBackend(epoch_factory, measure),
+                        cases=cases)
+    assert len(legacy) == len(modern) == 2
+    for a, b in zip(legacy, modern):
+        assert np.array_equal(a.times, b.times)
 
 
 def test_design_produces_distribution_of_epoch_averages():

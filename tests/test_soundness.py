@@ -191,3 +191,89 @@ def test_tost_type_one_error_at_exact_boundary():
         a = rng.lognormal(np.log(1.0 + MARGIN), 0.05, N_EPOCHS)
         rejections += tost_wilcoxon(a, b, margin=MARGIN).p_value <= ALPHA
     assert rejections / n_trials <= ALPHA
+
+
+# ---------------------------------------------------------------------------
+# Budgeted allocation: false-retire / false-survive operating characteristics
+# ---------------------------------------------------------------------------
+
+def _race(seed, effect=0.0, sigma=0.05, n_axes=2, n_epochs_max=8,
+          policy=None):
+    """One full racing allocation over a synthetic 2^n grid, through the
+    production decision path (RacingPolicy.plan_round/decide ->
+    axis_decisions). ``effect`` is an additive shift on axis ``a0``'s
+    second level; the other axes are truly null. Returns the decided map."""
+    from repro.sweeps import AllocState, CellData, RacingPolicy
+
+    pol = policy or RacingPolicy(n_min_null=6)
+    levels = ("x", "y")
+    n_cells = 2 ** n_axes
+    axes = [dict(name=f"a{i}", labels=list(levels)) for i in range(n_axes)]
+    cell_levels = {c: {f"a{i}": levels[(c >> i) & 1] for i in range(n_axes)}
+                   for c in range(n_cells)}
+    measured = {c: {} for c in range(n_cells)}
+
+    def state(decided, rnd, spent):
+        cells = []
+        for c in range(n_cells):
+            if not measured[c]:
+                continue
+            vals = np.array([measured[c][e] for e in sorted(measured[c])])
+            cells.append(CellData(index=c, levels=dict(cell_levels[c]),
+                                  medians={("op", 1): vals}))
+        return AllocState(axes=axes, cell_levels=cell_levels, cells=cells,
+                          decided=dict(decided), round=rnd, spent_nrep=spent,
+                          n_epochs_max=n_epochs_max)
+
+    decided, rnd, spent = {}, 0, 0
+    while True:
+        plan = pol.plan_round(state(decided, rnd, spent))
+        if plan is None:
+            break
+        for c in plan.cells:
+            shift = effect if cell_levels[c]["a0"] == levels[1] else 0.0
+            for e in range(*plan.epochs):
+                rng = np.random.default_rng([seed, c, e])
+                measured[c][e] = 1.0 + shift + float(rng.normal(0, sigma))
+        spent += plan.n_cell_epochs() * 10
+        rnd += 1
+        for axis, d in pol.decide(state(decided, rnd, spent)).items():
+            if d.resolved and axis not in decided:
+                decided[axis] = d.verdict
+    return decided
+
+
+def test_racing_false_matters_rate_bounded_by_alpha():
+    """All axes truly null: the alpha-spending + Holm schedule must keep
+    the family-wise rate of a spurious MATTERS (a *false survive* that
+    burns budget AND misreports the ranking) at or below α across the
+    whole multi-look allocation."""
+    n_trials = 200
+    false_matters = sum(
+        "MATTERS" in _race(seed=1000 + t, effect=0.0).values()
+        for t in range(n_trials))
+    assert false_matters / n_trials <= ALPHA
+
+
+def test_racing_retires_true_nulls_instead_of_spending():
+    """The flip side of the futility rule: truly-null axes should
+    overwhelmingly end retired as null, not limp along undecided to the
+    epoch cap — that is where the budget saving comes from."""
+    n_trials = 100
+    retired = sum(
+        list(_race(seed=3000 + t, effect=0.0).values()).count("null")
+        for t in range(n_trials))
+    assert retired / (2 * n_trials) >= 0.8
+
+
+def test_racing_power_and_false_retire_rate_on_strong_effect():
+    """A strong real effect on a0 (far above delta_null's futility bar):
+    the race must call it MATTERS with power >= 0.8, and the rate of
+    *false retire* (a0 ending 'null' — the error that would silently drop
+    a real factor from the paper's ranking) must stay <= α."""
+    n_trials = 100
+    decisions = [_race(seed=2000 + t, effect=0.5) for t in range(n_trials)]
+    matters = sum(d.get("a0") == "MATTERS" for d in decisions)
+    false_retire = sum(d.get("a0") == "null" for d in decisions)
+    assert matters / n_trials >= 0.8
+    assert false_retire / n_trials <= ALPHA
