@@ -332,6 +332,7 @@ def _run_audit(ap, args) -> None:
 def _run_suite(ap, args) -> None:
     """The default mode: run the benchmark suite and print CSV rows."""
     from repro.core.design import NREP_SPENT
+    from repro.simjax import engine_stats
 
     from benchmarks import suite
     from benchmarks.suite import ALL_BENCHES
@@ -365,6 +366,7 @@ def _run_suite(ap, args) -> None:
             continue
         t0 = time.time()
         nrep0 = NREP_SPENT.read()
+        jit0 = engine_stats()
         try:
             rows = bench()
         except Exception as e:  # keep the suite running; report at the end
@@ -383,11 +385,20 @@ def _run_suite(ap, args) -> None:
         # shows *when* a box is slow, nrep shows what the experiment *paid*
         print(f"# {bench.__name__} took {dt:.1f}s, spent {nrep_total} nrep",
               file=sys.stderr, flush=True)
-        report["benches"].append(
-            dict(name=bench.__name__, seconds=round(dt, 3),
-                 nrep_total=nrep_total,
-                 rows=[dict(name=n, us_per_call=u, derived=d)
-                       for n, u, d in rows]))
+        entry = dict(name=bench.__name__, seconds=round(dt, 3),
+                     nrep_total=nrep_total,
+                     rows=[dict(name=n, us_per_call=u, derived=d)
+                           for n, u, d in rows])
+        # jit telemetry delta: traces compiled / device dispatches this
+        # bench issued through the simulation engine ("one trace per
+        # campaign" as a measured quantity; absent for numpy-only benches)
+        jit1 = engine_stats()
+        nd = jit1["n_dispatches"] - jit0["n_dispatches"]
+        if nd > 0:
+            nt = jit1["n_traces"] - jit0["n_traces"]
+            entry["jit"] = dict(n_traces=nt, n_dispatches=nd,
+                                cache_hit_rate=round(1.0 - nt / nd, 4))
+        report["benches"].append(entry)
     report["total_seconds"] = round(time.time() - t_suite, 3)
     report["total_nrep"] = NREP_SPENT.read() - nrep_suite
     report["failures"] = failures

@@ -499,6 +499,66 @@ def bench_micro_simjax():
     return rows
 
 
+def bench_micro_fused_campaign():
+    """Campaign-resident execution vs per-cell-epoch dispatch (not a paper
+    figure): E launch epochs of one case at the simjax-gate shape
+    (nrep=100000, p=64), measured as the PR 7 loop of per-epoch jit
+    dispatches vs one `run_windowed_epochs_jax` fused call (vmapped
+    sampling, chunked-scan window, one trace per shape bucket). Both walls
+    pay full campaign-per-epoch overhead (clock/sync extraction, host RNG,
+    transfers); compilation is amortized by untimed warm-ups, matching a
+    multi-cell campaign. The speedup row is the CI gate for the fused
+    engine."""
+    from repro.simjax import have_jax, run_windowed_epochs_jax
+
+    if not have_jax():
+        return [("micro/fused_campaign_unavailable", 0.0,
+                 "jax not importable")]
+
+    E, nrep, p, msize = 4, 100000, 64, 4096
+    sync_kw = dict(n_fitpts=60, n_exchanges=20)
+
+    def setup(seed):
+        nets, syncs, ops = [], [], []
+        for e in range(E):
+            net = SimNet(p, seed=_seed(seed) + 1000 * e)
+            syncs.append(make_sync("hca", **sync_kw).synchronize(net))
+            nets.append(net)
+            ops.append(make_op("allreduce"))
+        return nets, syncs, ops
+
+    for warm_seed in (901, 902):         # compile + first-dispatch warm-up
+        nets, syncs, ops = setup(warm_seed)
+        run_windowed(nets[0], syncs[0], ops[0], msize, nrep, 400e-6,
+                     engine="jax")
+        run_windowed_epochs_jax(nets, syncs, ops, msize, nrep, 400e-6)
+
+    rows = []
+    timings = {}
+    for label in ("percell", "fused"):
+        walls = []
+        for trial in range(3):
+            nets, syncs, ops = setup(900 + 10 * trial)
+            t0 = time.perf_counter()
+            if label == "fused":
+                run_windowed_epochs_jax(nets, syncs, ops, msize, nrep,
+                                        400e-6)
+            else:
+                for e in range(E):
+                    run_windowed(nets[e], syncs[e], ops[e], msize, nrep,
+                                 400e-6, engine="jax")
+            walls.append(time.perf_counter() - t0)
+        timings[label] = min(walls)
+        rows.append((f"micro/fused_campaign_{label}",
+                     timings[label] / (E * nrep) * 1e6,
+                     f"wall={timings[label]:.3f}s (best of 3) "
+                     f"E={E} epochs"))
+    rows.append(("micro/fused_campaign_speedup",
+                 timings["percell"] / timings["fused"],
+                 f"E={E} nrep={nrep} p={p} (x, not us; >=3 required)"))
+    return rows
+
+
 def bench_micro_sweeps():
     """Scheduler microbenchmark (not a paper figure): wall-clock of a
     4-cell factor sweep (grid compile + per-cell campaigns + factor-impact
@@ -624,6 +684,7 @@ ALL_BENCHES = [
     bench_micro_run_windowed,
     bench_micro_run_windowed_rw,
     bench_micro_simjax,
+    bench_micro_fused_campaign,
     bench_micro_sweeps,
     bench_real_step_functions,
 ]

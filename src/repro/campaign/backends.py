@@ -24,6 +24,7 @@ campaign reproduces the original records bit-for-bit.
 from __future__ import annotations
 
 import warnings
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Protocol, runtime_checkable
 
@@ -45,9 +46,27 @@ __all__ = [
     "JaxBackend",
     "KernelBackend",
     "ensure_host_devices",
+    "fallback_warning_scope",
 ]
 
 _SYNC_KW = dict(n_fitpts=200, n_exchanges=40)
+
+# Active fallback-warning dedup scopes (innermost last). A sweep pushes one
+# scope around all of its cell campaigns so each distinct engine-fallback
+# reason warns once per *sweep*, not once per cell.
+_WARN_SCOPE: list = []
+
+
+@contextmanager
+def fallback_warning_scope():
+    """Deduplicate engine-fallback ``RuntimeWarning``s across every campaign
+    run inside the scope. Without an active scope each backend instance
+    dedups on its own (once per campaign)."""
+    _WARN_SCOPE.append(set())
+    try:
+        yield
+    finally:
+        _WARN_SCOPE.pop()
 
 
 def _filter_sync_kw(sync_name: str, kw: dict) -> dict:
@@ -212,6 +231,7 @@ class SimBackend:
     buffer_policy: str = "warm"        # warm | cold
     epoch_isolation: str = "process"   # process | none
     dtype: str = "float32"             # label-only (null factor by design)
+    fuse_epochs: bool = True           # execution knob, not a factor
     name: str = "sim"
     _shared_epoch: Any = field(default=None, init=False, repr=False,
                                compare=False)
@@ -221,10 +241,13 @@ class SimBackend:
     def _warn_fallback(self, note: str) -> None:
         """Warn once per campaign (per distinct reason) when the requested
         engine is substituted — the audit trail for the historic bug where
-        ``engine="auto"`` silently dropped to the scalar path."""
-        if note in self._fallback_warned:
+        ``engine="auto"`` silently dropped to the scalar path. Inside a
+        :func:`fallback_warning_scope` (a sweep), dedup widens to the whole
+        scope so the report is not drowned in per-cell repeats."""
+        seen = _WARN_SCOPE[-1] if _WARN_SCOPE else self._fallback_warned
+        if note in seen:
             return
-        self._fallback_warned.add(note)
+        seen.add(note)
         warnings.warn(f"SimBackend(engine={self.engine!r}): {note}",
                       RuntimeWarning, stacklevel=3)
 
@@ -269,6 +292,91 @@ class SimBackend:
         if ctx.engine_note is not None:
             meta["engine_fallback"] = ctx.engine_note
         return meta
+
+    def measure_epochs(self, work: dict, design: ExperimentDesign):
+        """Fused campaign execution (the optional backend capability
+        :class:`~repro.campaign.Campaign` probes for).
+
+        ``work`` maps ``epoch -> [TestCase, ...]`` in that epoch's shuffled
+        case order. Epochs whose next pending case coincides are measured by
+        ONE device program per cost-model term
+        (:func:`repro.simjax.run_windowed_epochs_jax`); each epoch's own
+        case order, host RNG stream, AR(1) carries and ``net.t`` writebacks
+        are preserved exactly, so records match what sequential per-epoch
+        measurement of the same pending work would produce (modulo the
+        fused window's documented draw change). Window discards are topped
+        up per epoch and adaptive nrep continues through the normal
+        :func:`~repro.core.design.measure_adaptive` loop, both reusing the
+        bucketed per-epoch traces.
+
+        Returns ``{(op, msize, epoch): (times, meta)}`` covering every case
+        in ``work``, or ``None`` when the fused path cannot run it (caller
+        then measures per epoch as before): fusing disabled, shared-cluster
+        epoch isolation, no jax, or an engine other than the jit one.
+        """
+        if not self.fuse_epochs or self.epoch_isolation != "process":
+            return None
+        # Only an explicit engine="jax" can resolve to the jit engine
+        # (auto prefers the numpy batch path) — gate before building any
+        # epoch context, so non-jax campaigns pay nothing for the probe.
+        if self.engine != "jax":
+            return None
+        if not work or all(not cases for cases in work.values()):
+            return None
+        from repro.simjax import have_jax
+        if not have_jax():
+            return None
+        ctxs = {e: self.make_epoch(e) for e in sorted(work)}
+        if any(ctx.engine != "jax" for ctx in ctxs.values()):
+            return None          # only the jit engine has a fused program
+        from repro.core.design import measure_adaptive
+        from repro.simjax import run_windowed_epochs_jax
+
+        nrep0 = design.nrep_min if design.adaptive else design.nrep
+        pos = {e: 0 for e in sorted(work)}
+        out: dict = {}
+        while True:
+            by_case: dict = {}
+            for e in sorted(work):
+                if pos[e] < len(work[e]):
+                    c = work[e][pos[e]]
+                    by_case.setdefault((c.op, c.msize), []).append(e)
+            if not by_case:
+                return out
+            # Most common next case first: maximal epoch fan-in per
+            # dispatch without ever reordering within an epoch.
+            (op_name, msize), epochs = max(
+                by_case.items(), key=lambda kv: (len(kv[1]), kv[0]))
+            ops = [ctxs[e].op(op_name) for e in epochs]
+            runs = run_windowed_epochs_jax(
+                [ctxs[e].net for e in epochs],
+                [ctxs[e].sync for e in epochs],
+                ops, msize, nrep0, self.win_size)
+            for i, e in enumerate(epochs):
+                ctx, case = ctxs[e], work[e][pos[e]]
+                rs = [runs[i]]
+                # top up the window discards (bounded, as measure() does)
+                for _ in range(2):
+                    miss = nrep0 - sum(r.valid_times.size for r in rs)
+                    if miss <= 0:
+                        break
+                    rs.append(run_windowed(ctx.net, ctx.sync, ops[i],
+                                           msize, miss,
+                                           win_size=self.win_size,
+                                           engine=ctx.engine))
+                valid = np.concatenate([r.valid_times for r in rs])
+                times = valid if valid.size else np.concatenate(
+                    [r.times for r in rs])[:nrep0]
+                if design.adaptive:
+                    times, meta = measure_adaptive(self.measure, ctx, case,
+                                                   design, initial=times)
+                else:
+                    meta = dict(nrep_used=int(times.size), converged=True)
+                meta.update(self.record_meta(ctx, case))
+                meta["fused"] = True
+                out[(op_name, msize, e)] = (np.asarray(times, np.float64),
+                                            meta)
+                pos[e] += 1
 
     def factors(self, design: ExperimentDesign) -> FactorSet:
         return capture_factors(

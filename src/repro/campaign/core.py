@@ -28,15 +28,36 @@ from __future__ import annotations
 import platform
 from dataclasses import dataclass, field
 
-from repro.core.design import (ExperimentDesign, MeasurementRecord,
-                               ResultTable, TestCase, analyze_records,
-                               case_orders, measure_case)
+from repro.core.design import (NREP_SPENT, ExperimentDesign,
+                               MeasurementRecord, ResultTable, TestCase,
+                               analyze_records, case_orders, measure_case)
 from repro.core.factors import FactorSet
 
 from .backends import MeasurementBackend
 from .store import ResultStore, StoreSnapshot
 
 __all__ = ["CampaignSpec", "CampaignResult", "Campaign"]
+
+
+def _engine_stats() -> dict:
+    """Cumulative jit telemetry of the simulation engine (zeros when jax
+    is absent — `engine_stats` itself never imports jax)."""
+    from repro.simjax import engine_stats
+
+    return engine_stats()
+
+
+def _jit_delta(before: dict, after: dict) -> dict | None:
+    """This campaign's share of the jit telemetry: dispatches issued and
+    traces newly compiled while it ran, plus the trace-cache hit rate
+    (dispatches served without a fresh compile). None when the campaign
+    never touched the jit engine — meta stays clean for other backends."""
+    nd = after["n_dispatches"] - before["n_dispatches"]
+    if nd <= 0:
+        return None
+    nt = after["n_traces"] - before["n_traces"]
+    return dict(n_traces=nt, n_dispatches=nd,
+                cache_hit_rate=round(1.0 - nt / nd, 4))
 
 
 @dataclass
@@ -136,11 +157,33 @@ class Campaign:
 
         records: list[MeasurementRecord] = []
         n_measured = n_resumed = 0
-        for epoch, order in enumerate(case_orders(design, cases)):
+        orders = list(enumerate(case_orders(design, cases)))
+        stats0 = _engine_stats()
+
+        # Fused execution: a backend advertising `measure_epochs` gets the
+        # whole window's pending work in one call and may batch epochs into
+        # shared device programs. `None` (capability gated off for this
+        # configuration) falls back to per-epoch measurement below.
+        fused: dict = {}
+        measure_epochs = getattr(backend, "measure_epochs", None)
+        if measure_epochs is not None:
+            work = {}
+            for epoch, order in orders:
+                if epoch_window is not None and epoch not in epoch_window:
+                    continue
+                pending = [c for c in order
+                           if (c.op, c.msize, epoch) not in done]
+                if pending:
+                    work[epoch] = pending
+            if work:
+                fused = measure_epochs(work, design) or {}
+
+        for epoch, order in orders:
             if epoch_window is not None and epoch not in epoch_window:
                 continue
             missing = [c for c in order
-                       if (c.op, c.msize, epoch) not in done]
+                       if (c.op, c.msize, epoch) not in done
+                       and (c.op, c.msize, epoch) not in fused]
             ctx = backend.make_epoch(epoch) if missing else None
             for case in order:
                 key = (case.op, case.msize, epoch)
@@ -148,15 +191,22 @@ class Campaign:
                     records.append(done[key])
                     n_resumed += 1
                     continue
-                times, meta = measure_case(backend.measure, ctx, case, design)
+                if key in fused:
+                    times, meta = fused.pop(key)
+                    NREP_SPENT.add(times.size)
+                else:
+                    times, meta = measure_case(backend.measure, ctx, case,
+                                               design)
                 # `host` is deliberately NOT part of the fingerprint
                 # (FactorSet excludes it), so a merged multi-host store
                 # needs it stamped on every record to stay auditable.
                 meta.setdefault("host", platform.node())
                 # Backend-provided provenance (e.g. which window engine
-                # actually ran after fallback resolution).
+                # actually ran after fallback resolution). Fused records
+                # carry theirs already — their epoch context lives inside
+                # the backend's fused call, not here.
                 record_meta = getattr(backend, "record_meta", None)
-                if record_meta is not None:
+                if record_meta is not None and ctx is not None:
                     for k, v in record_meta(ctx, case).items():
                         meta.setdefault(k, v)
                 rec = MeasurementRecord(case=case, epoch=epoch, times=times,
@@ -170,6 +220,9 @@ class Campaign:
 
         table = analyze_records(records, design.outlier_filter)
         meta = spec.meta()
+        jit = _jit_delta(stats0, _engine_stats())
+        if jit is not None:
+            meta["jit"] = jit
         if self.archive is not None:
             entry = self.archive.register(store.path)
             meta["archived_run"] = entry.run_id

@@ -44,6 +44,7 @@ from repro.core.design import (ExperimentDesign, ResultTable, TestCase,
                                analyze_records, map_parallel)
 from repro.core.factors import FactorGrid, FactorSet, GridCell
 
+from .backends import fallback_warning_scope
 from .core import Campaign, CampaignResult, CampaignSpec
 from .store import ResultStore
 
@@ -157,8 +158,14 @@ class SweepScheduler:
     # -- execution ---------------------------------------------------------
 
     def run(self) -> SweepResult:
-        if self.policy is not None:
-            return self._run_adaptive()
+        # One engine-fallback warning per distinct reason per *sweep* —
+        # the per-cell campaigns inside share a single dedup scope.
+        with fallback_warning_scope():
+            if self.policy is not None:
+                return self._run_adaptive()
+            return self._run_uniform()
+
+    def _run_uniform(self) -> SweepResult:
         spec, store = self.spec, self.store
         compiled = self.compile()
 

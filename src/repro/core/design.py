@@ -209,16 +209,25 @@ def measure_adaptive(
     ctx: Any,
     case: TestCase,
     design: ExperimentDesign,
+    initial: np.ndarray | None = None,
 ) -> tuple[np.ndarray, dict]:
     """Sequential stopping for one case: sample in growing chunks until the
     relative CI half-width of the (Tukey-filtered) mean reaches
     ``design.rel_ci_target``, bounded by ``nrep_min``/``nrep_max``.
 
+    ``initial`` injects an already-measured first chunk (a fused backend's
+    batched ``nrep_min`` dispatch) so only the top-up chunks go through
+    ``measure``; the stopping rule is unchanged.
+
     Returns ``(times, meta)`` where ``meta`` records ``nrep_used``,
     ``converged`` and the final ``rel_ci`` — the provenance every stored
     result needs to interpret its own sample size.
     """
-    times = np.asarray(measure(ctx, case, design.nrep_min), dtype=np.float64)
+    if initial is not None:
+        times = np.asarray(initial, dtype=np.float64)
+    else:
+        times = np.asarray(measure(ctx, case, design.nrep_min),
+                           dtype=np.float64)
     while True:
         kept = tukey_filter(times) if design.outlier_filter else times
         rel = relative_ci_width(kept if kept.size else times, design.ci_level)

@@ -16,6 +16,16 @@ campaigns are statistically, not bit-wise, identical to the numpy engines
 (``tests/test_batch_equivalence.py``).
 """
 
-from .engine import SimJaxUnavailable, have_jax, run_windowed_jax
+from .engine import (FusedWindowRun, SimJaxUnavailable, engine_stats,
+                     have_jax, reset_engine_stats, run_windowed_epochs_jax,
+                     run_windowed_jax)
 
-__all__ = ["SimJaxUnavailable", "have_jax", "run_windowed_jax"]
+__all__ = [
+    "SimJaxUnavailable",
+    "have_jax",
+    "run_windowed_jax",
+    "run_windowed_epochs_jax",
+    "FusedWindowRun",
+    "engine_stats",
+    "reset_engine_stats",
+]

@@ -21,18 +21,43 @@ are padded to a power-of-two bucket so adaptive campaigns hit a handful of
 compiled shapes instead of recompiling per top-up; padded windows are
 computed and discarded (the entry recurrence is forward-only, so the first
 ``nrep`` windows are unaffected).
+
+:func:`run_windowed_epochs_jax` is the campaign-resident variant: duration
+sampling is vmapped over a per-epoch key axis (``fold_in`` of each epoch's
+seed, so per-epoch draws stay bit-identical to the per-epoch engine) and
+the window recurrence runs as a chunked ``lax.scan`` whose ``(chunk, p)``
+working set stays cache-resident — one compiled trace per ``(op,
+shape-bucket)`` serves every epoch and grid cell of a campaign. The fused
+window computes its per-rank arithmetic in float32 on window-relative
+times (the f64 absolute frame is carried by the O(nrep) chain only) and
+draws the finish-imbalance factors from a 2^16-entry normal-quantile
+table instead of per-value erfinv; its observations are therefore
+statistically indistinguishable from the per-epoch engine's rather than
+bit-identical (the sampled *durations* remain bit-identical).
+
+Both engines meter themselves: :func:`engine_stats` counts compiled traces
+and dispatches, so "one trace per campaign" is a measured quantity.
 """
 
 from __future__ import annotations
 
 import functools
 import os
+from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.window import START_LATE, TOOK_TOO_LONG, WindowRun
 
-__all__ = ["SimJaxUnavailable", "have_jax", "run_windowed_jax"]
+__all__ = [
+    "SimJaxUnavailable",
+    "have_jax",
+    "run_windowed_jax",
+    "run_windowed_epochs_jax",
+    "FusedWindowRun",
+    "engine_stats",
+    "reset_engine_stats",
+]
 
 
 class SimJaxUnavailable(RuntimeError):
@@ -64,9 +89,54 @@ def _bucket(nrep: int) -> int:
     return n
 
 
+class _EngineStats:
+    """Process-global jit telemetry: every device dispatch is counted, and
+    trace keys (jitted function x static/shape signature) are collected so
+    ``n_traces`` measures distinct compilations. Monotone by design — like
+    the jit cache it mirrors — so a snapshot-delta of the counts is the
+    per-campaign telemetry."""
+
+    __slots__ = ("dispatches", "trace_keys")
+
+    def __init__(self) -> None:
+        self.dispatches = 0
+        self.trace_keys: set = set()
+
+    def count(self, trace_key: tuple) -> None:
+        self.dispatches += 1
+        self.trace_keys.add(trace_key)
+
+
+_STATS = _EngineStats()
+
+
+def engine_stats() -> dict:
+    """Cumulative jit telemetry: ``n_traces`` (distinct compiled
+    signatures) and ``n_dispatches`` (device calls). Campaigns and the
+    bench harness snapshot this before/after and report the delta."""
+    return {"n_traces": len(_STATS.trace_keys),
+            "n_dispatches": _STATS.dispatches}
+
+
+def reset_engine_stats() -> None:
+    _STATS.dispatches = 0
+    _STATS.trace_keys.clear()
+
+
+def _chunk_for(p: int, n: int) -> int:
+    """Rep-axis chunk of the fused window scan: sized so one ``(chunk, p)``
+    float32 block is ~512 KB (cache-resident through the ~10 elementwise
+    passes), never larger than the bucketed ``n`` itself."""
+    ch = max(1, 131072 // max(1, p))
+    ch = max(256, min(8192, 1 << (ch.bit_length() - 1)))
+    return min(ch, n)
+
+
 @functools.lru_cache(maxsize=1)
-def _jitted():
-    """Build (once) the jitted sample/window cores. Raises
+def _cores():
+    """The raw (un-jitted) sample/window math, built once. Shared by the
+    per-epoch and the fused builders so the fused engine's vmapped duration
+    sampling runs byte-for-byte the same program per epoch key. Raises
     :class:`SimJaxUnavailable` when jax is missing."""
     if not have_jax():
         raise SimJaxUnavailable("engine='jax' requires jax, which is not "
@@ -129,9 +199,176 @@ def _jitted():
         times = eg.max(axis=1) - sg.min(axis=1)
         return times, errors, sg, eg, start, end
 
+    return jax, sample, window
+
+
+@functools.lru_cache(maxsize=1)
+def _jitted():
+    """Build (once) the jitted per-epoch sample/window cores."""
+    jax, sample, window = _cores()
     return (jax,
             jax.jit(sample, static_argnames=("n", "use_pallas")),
             jax.jit(window))
+
+
+@functools.lru_cache(maxsize=1)
+def _norm_lut():
+    """2^16-entry float32 normal-quantile table (quantile midpoints, so
+    the discretized draw is exactly stratified): the fused window's
+    imbalance draw replaces per-value erfinv with 16 random bits + a
+    cache-resident gather."""
+    from scipy.special import ndtri
+
+    q = (np.arange(65536, dtype=np.float64) + 0.5) / 65536.0
+    return ndtri(q).astype(np.float32)
+
+
+@functools.lru_cache(maxsize=1)
+def _jitted_fused():
+    """Build (once) the campaign-resident cores:
+
+    * ``sample_epochs`` — the per-epoch :func:`_cores` ``sample`` vmapped
+      over an epoch axis of keys derived per epoch seed (bit-identical per
+      lane to the per-epoch engine);
+    * ``window_fused``  — the window recurrence as a chunked ``lax.scan``:
+      per-rank arithmetic in float32 on window-relative times, the
+      sequential f64 chain (entry cumsum/cummax, previous-window rows)
+      carried across chunks, LUT-quantile imbalance draw, and only the
+      O(nrep) outputs materialized.
+    """
+    jax, sample, _ = _cores()
+    import jax.numpy as jnp
+    from jax import lax
+
+    lut = jnp.asarray(_norm_lut())
+
+    def sample_epochs(seeds, j, t0_op, ar_state, noise_sigma, autocorr,
+                      tail_prob, tail_shift, spike_prob, spike_scale, nrep,
+                      *, n, use_pallas):
+        def one(seed, t0e, are):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), j)
+            dur, s = sample(key, t0e, are, noise_sigma, autocorr, tail_prob,
+                            tail_shift, spike_prob, spike_scale, n=n,
+                            use_pallas=use_pallas)
+            return dur, s[nrep - 1]
+        return jax.vmap(one)(seeds, t0_op, ar_state)
+
+    def window_fused(durations, key, t0, off, skew, scale, slope, intercept,
+                     init_t, rank_imbalance, start_time, win_size, nrep,
+                     *, ch):
+        npad = durations.shape[0]
+        nch = npad // ch
+        p = t0.shape[0]
+        # Per-rank affine constants: deadline_true and to_global are both
+        # affine in the target time, so the (n, p) grids reduce to
+        # slope/anchor pairs evaluated on window-relative f32 offsets.
+        alpha = 1.0 / ((1.0 - slope) * (1.0 + scale) * (1.0 + skew))
+        beta = ((intercept / (1.0 - slope) + init_t) / (1.0 + scale)
+                - off) / (1.0 + skew)
+        gamma = (1.0 - slope) * (1.0 + scale) * (1.0 + skew)
+        delta = (off * (1.0 + scale) - init_t) * (1.0 - slope) - intercept
+        T0 = start_time
+        d0_32 = ((alpha - 1.0) * T0 + beta).astype(jnp.float32)
+        g0_32 = ((gamma - 1.0) * T0 + delta).astype(jnp.float32)
+        am1_32 = (alpha - 1.0).astype(jnp.float32)
+        gm1_32 = (gamma - 1.0).astype(jnp.float32)
+        gam32 = gamma.astype(jnp.float32)
+        maxt0 = jnp.max(t0)
+        ws32 = jnp.asarray(win_size, jnp.float32)
+        ri32 = jnp.asarray(rank_imbalance, jnp.float32)
+        t0rel32 = (t0 - T0).astype(jnp.float32)
+        k2 = (p + 1) // 2
+        keys = jax.random.split(key, nch)
+        nrep1 = nrep - 1
+
+        def step(carry, xs):
+            Crun, cmax, prev_last, et_sel = carry
+            dur_i, key_i, ic = xs
+            tau = win_size * (ic * ch + jnp.arange(ch, dtype=jnp.float64))
+            tau32 = tau.astype(jnp.float32)[:, None]
+            bits = jax.random.bits(key_i, (ch, k2), jnp.uint32)
+            idx = jnp.concatenate([bits & 0xFFFF, bits >> 16],
+                                  axis=1)[:, :p]
+            z = lut[idx]
+            drel = am1_32[None, :] * tau32 + d0_32[None, :]
+            dur32 = dur_i.astype(jnp.float32)[:, None]
+            span = dur32 * jnp.maximum(jnp.float32(0.25), 1.0 + ri32 * z)
+            e = span.max(axis=1).astype(jnp.float64)
+            dmaxrel = drel.max(axis=1).astype(jnp.float64)
+            T = T0 + tau
+            C = Crun + jnp.concatenate(
+                [jnp.zeros((1,), jnp.float64), jnp.cumsum(e[:-1])])
+            cm = lax.cummax(jnp.concatenate([cmax[None],
+                                             T + dmaxrel - C]))[1:]
+            all_in = C + jnp.maximum(maxt0, cm)
+            A32 = (all_in - T).astype(jnp.float32)[:, None]
+            endrel = A32 + span
+            prevrel = jnp.concatenate([prev_last[None, :], endrel[:-1]],
+                                      axis=0) - ws32
+            startrel = jnp.maximum(drel, prevrel)
+            late = (drel <= prevrel).any(axis=1)
+            base = gm1_32[None, :] * tau32 + g0_32[None, :]
+            egrel = base + gam32[None, :] * endrel
+            sgrel = base + gam32[None, :] * startrel
+            took = (egrel > ws32).any(axis=1)
+            errors = jnp.where(late, START_LATE, 0) \
+                | jnp.where(took, TOOK_TOO_LONG, 0)
+            times = egrel.max(axis=1).astype(jnp.float64) \
+                - sgrel.min(axis=1).astype(jnp.float64)
+            # end_true row nrep-1 (the net.t carry-out) without
+            # materializing the (n, p) grid: grab it in the chunk it lives
+            local = nrep1 - ic * ch
+            hit = (local >= 0) & (local < ch)
+            row = lax.dynamic_slice_in_dim(
+                endrel, jnp.clip(local, 0, ch - 1), 1, axis=0)[0]
+            et_sel = jnp.where(hit, row, et_sel)
+            return (C[-1] + e[-1], cm[-1], endrel[-1], et_sel), \
+                (times, errors)
+
+        init = (jnp.float64(0.0), jnp.float64(-jnp.inf), t0rel32 + ws32,
+                jnp.zeros((p,), jnp.float32))
+        (_, _, _, et_sel), (times, errors) = lax.scan(
+            step, init, (durations.reshape(nch, ch), keys,
+                         jnp.arange(nch)))
+        et_last = et_sel.astype(jnp.float64) + (T0 + win_size * nrep1)
+        return times.reshape(-1), errors.reshape(-1), et_last
+
+    return (jax,
+            jax.jit(sample_epochs, static_argnames=("n", "use_pallas")),
+            jax.jit(window_fused, static_argnames=("ch",)))
+
+
+@dataclass
+class FusedWindowRun:
+    """O(nrep) outputs of one fused epoch. The ``(nrep, p)`` global-time
+    grids of :class:`WindowRun` are deliberately not materialized — the
+    fused engine keeps only what campaign records consume."""
+
+    times: np.ndarray
+    errors: np.ndarray
+
+    @property
+    def valid_times(self) -> np.ndarray:
+        return self.times[self.errors == 0]
+
+
+def _rank_sharding(p: int):
+    """NamedSharding splitting the rank axis across all visible devices
+    (None when single-device, or when ``p`` does not divide evenly). The
+    fused window's cross-rank reductions (max / min / any) are
+    order-independent, so the sharded program is bitwise-identical to the
+    single-device one — which is what the forced-host-device CI asserts."""
+    if not have_jax():
+        return None
+    import jax
+
+    devs = jax.devices()
+    if len(devs) <= 1 or p % len(devs) != 0:
+        return None
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+    mesh = Mesh(np.array(devs), ("ranks",))
+    return NamedSharding(mesh, PartitionSpec("ranks"))
 
 
 def _terms(op, p: int, msize: int):
@@ -191,12 +428,14 @@ def run_windowed_jax(net, sync, op, msize, nrep, win_size,
         durations = None
         for j, (sub, tp, tm) in enumerate(terms):
             t0_op = sub.base_time(tp, tm) * sub._bias_for(net)
+            _STATS.count(("sample", n, use_pallas))
             dur, s = sample(jax.random.fold_in(key, j), t0_op,
                             sub._ar_state, sub.noise_sigma, sub.autocorr,
                             sub.tail_prob, sub.tail_shift, sub.spike_prob,
                             sub.spike_scale, n=n, use_pallas=use_pallas)
             sub._ar_state = float(s[nrep - 1])
             durations = dur if durations is None else durations + dur
+        _STATS.count(("window", n, p))
         times, errors, sg, eg, st, et = window(
             durations, jax.random.fold_in(key, len(terms)), t0, off, skew,
             scale, slope, intercept, init_t, op.rank_imbalance, start_time,
@@ -212,3 +451,126 @@ def run_windowed_jax(net, sync, op, msize, nrep, win_size,
         start_true=np.asarray(st, dtype=np.float64)[:nrep],
         end_true=et,
     )
+
+
+def run_windowed_epochs_jax(nets, syncs, ops, msize, nrep, win_size,
+                            ranks=None,
+                            use_pallas: bool | None = None
+                            ) -> "list[FusedWindowRun]":
+    """Measure one case across all launch epochs in fused device programs.
+
+    ``nets[e] / syncs[e] / ops[e]`` are epoch ``e``'s simulator objects (one
+    triple per launch epoch, exactly what the per-epoch engine would see).
+    Duration sampling runs as ONE vmapped dispatch per cost-model term
+    (bit-identical per epoch lane to :func:`run_windowed_jax`: the same
+    ``_cores`` sample program under the same per-epoch ``fold_in`` keys);
+    the window recurrence dispatches per epoch — start times differ — but
+    every dispatch reuses one chunked-scan trace per ``(p, shape-bucket)``.
+    Host-side RNG order per epoch (window seed, then per-term epoch biases)
+    matches the per-epoch engine, and the AR(1) carry and ``net.t``
+    writebacks land exactly as ``E`` sequential per-epoch calls would, so a
+    campaign may interleave fused and per-epoch measurement of *different*
+    cases freely.
+
+    When several devices are visible and ``p`` divides evenly, the per-rank
+    inputs are placed with a rank-axis :class:`~jax.sharding.NamedSharding`
+    and GSPMD shards the window grid; cross-rank reductions are
+    order-independent, so sharded results are bitwise-identical.
+
+    Returns one :class:`FusedWindowRun` per epoch. Raises
+    :class:`SimJaxUnavailable` under the same conditions as
+    :func:`run_windowed_jax`.
+    """
+    E = len(nets)
+    if E == 0:
+        return []
+    ranks = list(range(nets[0].p)) if ranks is None else list(ranks)
+    p = len(ranks)
+    for net in nets:
+        if not all(net.clocks[r].rw_sigma <= 0.0 for r in ranks):
+            raise SimJaxUnavailable(
+                "engine='jax' requires affine clocks (rw_sigma == 0); use "
+                "engine='batch_rw' (or 'auto') for random-walk clocks")
+    jax, sample_epochs, window_fused = _jitted_fused()
+    if use_pallas is None:
+        use_pallas = _use_pallas_default()
+    if nrep <= 0:
+        return [FusedWindowRun(times=np.empty(0),
+                               errors=np.empty(0, dtype=np.int64))
+                for _ in range(E)]
+
+    n = _bucket(nrep)
+    ch = _chunk_for(p, n)
+    npad = -(-n // ch) * ch
+
+    # Host pass 1 — per-epoch seeds and window origins. Per-net RNG order
+    # (seed before biases) matches the per-epoch engine; epochs own
+    # independent nets, so interleaving across epochs is free.
+    start_times = np.empty(E, dtype=np.float64)
+    seeds = np.empty(E, dtype=np.int64)
+    term_lists = []
+    for e, (net, sync, op) in enumerate(zip(nets, syncs, ops)):
+        start_times[e] = max(sync.global_time(net, r)
+                             for r in ranks) + win_size
+        seeds[e] = int(net.rng.integers(2**31))
+        term_lists.append(_terms(op, p, msize))
+    nterms = len(term_lists[0])
+
+    # Host pass 2 — per-epoch clock/sync coefficient stacks, (E, p).
+    def stack(fn):
+        return np.stack([np.array([fn(e, r) for r in ranks])
+                         for e in range(E)])
+
+    t0 = stack(lambda e, r: nets[e].t[r])
+    off = stack(lambda e, r: nets[e].clocks[r].offset)
+    skew = stack(lambda e, r: nets[e].clocks[r].skew)
+    scale = stack(lambda e, r: nets[e].clocks[r].scale_error)
+    slope = stack(lambda e, r: syncs[e].models[r].slope)
+    intercept = stack(lambda e, r: syncs[e].models[r].intercept)
+    init_t = stack(lambda e, r: syncs[e].initial_times[r])
+
+    sharding = _rank_sharding(p)
+
+    def put(a):
+        return jax.device_put(a, sharding) if sharding is not None else a
+
+    from jax.experimental import enable_x64
+    with enable_x64():
+        durations = None
+        for j in range(nterms):
+            subs = [term_lists[e][j][0] for e in range(E)]
+            tp, tm = term_lists[0][j][1], term_lists[0][j][2]
+            t0_op = np.array([sub.base_time(tp, tm) * sub._bias_for(net)
+                              for sub, net in zip(subs, nets)])
+            ar_state = np.array([sub._ar_state for sub in subs])
+            s0 = subs[0]
+            _STATS.count(("sample_epochs", E, n, use_pallas))
+            dur, s_last = sample_epochs(
+                seeds, j, t0_op, ar_state, s0.noise_sigma, s0.autocorr,
+                s0.tail_prob, s0.tail_shift, s0.spike_prob, s0.spike_scale,
+                nrep, n=n, use_pallas=use_pallas)
+            s_last = np.asarray(s_last)
+            for e, sub in enumerate(subs):
+                sub._ar_state = float(s_last[e])
+            durations = dur if durations is None else durations + dur
+
+        import jax.numpy as jnp
+        if npad > n:
+            durations = jnp.concatenate(
+                [durations, jnp.broadcast_to(durations[:, n - 1:n],
+                                             (E, npad - n))], axis=1)
+        runs = []
+        for e in range(E):
+            key = jax.random.fold_in(jax.random.PRNGKey(int(seeds[e])),
+                                     nterms)
+            _STATS.count(("window_fused", ch, npad, p))
+            times, errors, et_last = window_fused(
+                durations[e], key, put(t0[e]), put(off[e]), put(skew[e]),
+                put(scale[e]), put(slope[e]), put(intercept[e]),
+                put(init_t[e]), ops[e].rank_imbalance,
+                float(start_times[e]), win_size, nrep, ch=ch)
+            nets[e].t[ranks] = np.asarray(et_last, dtype=np.float64)
+            runs.append(FusedWindowRun(
+                times=np.asarray(times, dtype=np.float64)[:nrep],
+                errors=np.asarray(errors, dtype=np.int64)[:nrep]))
+    return runs
