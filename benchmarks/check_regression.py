@@ -37,7 +37,27 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import re
 import sys
+
+
+def missing_trajectory_artifacts(changes_path: str,
+                                 bench_dir: str) -> list[str]:
+    """``BENCH_PR*.json`` artifacts referenced by the perf-trajectory log
+    (``CHANGES.md``) but absent from ``bench_dir``.
+
+    The trajectory is the sequence of per-PR reports the log claims were
+    committed; a referenced-but-missing file means the trajectory has a
+    hole that a plain baseline-vs-fresh gate would never notice. Reported
+    as a warning, not a failure: the hole is a provenance problem in an
+    *old* commit, and failing every future CI run cannot repair it."""
+    if not os.path.exists(changes_path):
+        return []
+    with open(changes_path) as f:
+        referenced = sorted(set(re.findall(r"BENCH_PR\d+\.json", f.read())))
+    return [name for name in referenced
+            if not os.path.exists(os.path.join(bench_dir, name))]
 
 
 def load_benches(path: str) -> dict[str, dict]:
@@ -120,6 +140,13 @@ def main() -> None:
         ap.error("--tolerance must be positive")
     failures = check(load_benches(args.baseline), load_benches(args.fresh),
                      args.tolerance)
+    bench_dir = os.path.dirname(os.path.abspath(__file__))
+    for name in missing_trajectory_artifacts(
+            os.path.join(os.path.dirname(bench_dir), "CHANGES.md"),
+            bench_dir):
+        print(f"warning: trajectory artifact benchmarks/{name} is "
+              "referenced by CHANGES.md but does not exist — the perf "
+              "trajectory has a hole", file=sys.stderr)
     if failures:
         print(f"perf gate: {failures} regression(s) beyond "
               f"{args.tolerance:g}x baseline", file=sys.stderr)

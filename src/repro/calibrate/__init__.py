@@ -1,0 +1,40 @@
+"""repro.calibrate — fit SimNet's noise model to measured runs, then
+certify the fit with the TOST audit engine.
+
+The bridge between every simulated result in this repo and real
+hardware: a :class:`CalibrationSpace` declares which noise-model knobs
+(AR(1) coefficient, bimodal-tail / spike / imbalance mixture weights,
+per-op latencies, clock ``rw_sigma``) may move and within what bounds;
+:func:`calibrate` measures a target backend, fits the space by
+deterministic coordinate descent on a per-cell quantile-distance
+objective (every candidate an ordinary store-resumed
+:class:`~repro.campaign.Campaign`), and certifies the fitted simulator
+EQUIVALENT / DRIFTED / INCONCLUSIVE on held-out launch epochs via
+:func:`~repro.history.audit_tables`. ::
+
+    from repro.calibrate import calibrate, default_space
+    from repro.campaign import JaxBackend, ResultStore, SimBackend
+    from repro.history import RunArchive
+
+    space = default_space(base=SimBackend(p=8, seed0=0))
+    result = calibrate(space, JaxBackend(),
+                       store=ResultStore("runs/calib-000.jsonl"),
+                       archive=RunArchive("runs/"))
+    assert result.ok, f"certification: {result.verdict}"
+
+Fits are resumable: search state persists as ``calib-round`` store lines
+(the ``sweep-alloc`` pattern), measurements resume at record granularity.
+"""
+
+from .fit import CALIBRATED_TAG, CalibrationResult, calibrate, certify_heldout
+from .space import CalibrationParam, CalibrationSpace, default_space
+
+__all__ = [
+    "CalibrationParam",
+    "CalibrationSpace",
+    "default_space",
+    "calibrate",
+    "certify_heldout",
+    "CalibrationResult",
+    "CALIBRATED_TAG",
+]

@@ -23,7 +23,6 @@ campaign reproduces the original records bit-for-bit.
 
 from __future__ import annotations
 
-import warnings
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Protocol, runtime_checkable
@@ -37,6 +36,7 @@ from repro.core.opexpr import parse_opexpr
 from repro.core.runtime_meter import JaxEpochContext, MeterConfig
 from repro.core.simnet import ClockParams, SimNet
 from repro.core.sync import make_sync
+from repro.core.warnutil import warn_external
 from repro.core.window import WindowRun, resolve_engine, run_windowed
 
 __all__ = [
@@ -243,13 +243,17 @@ class SimBackend:
         engine is substituted — the audit trail for the historic bug where
         ``engine="auto"`` silently dropped to the scalar path. Inside a
         :func:`fallback_warning_scope` (a sweep), dedup widens to the whole
-        scope so the report is not drowned in per-cell repeats."""
+        scope so the report is not drowned in per-cell repeats. The warning
+        is attributed to the first frame *outside* ``repro`` — the call
+        depth differs between a bare ``make_epoch`` and a full
+        ``Campaign.run``, so no fixed ``stacklevel`` can point at the
+        caller for both."""
         seen = _WARN_SCOPE[-1] if _WARN_SCOPE else self._fallback_warned
         if note in seen:
             return
         seen.add(note)
-        warnings.warn(f"SimBackend(engine={self.engine!r}): {note}",
-                      RuntimeWarning, stacklevel=3)
+        warn_external(f"SimBackend(engine={self.engine!r}): {note}",
+                      RuntimeWarning)
 
     def make_epoch(self, epoch: int) -> _SimEpoch:
         if self.buffer_policy not in ("warm", "cold"):

@@ -44,7 +44,13 @@ epoch window measured, and the axis verdicts the policy reached on the
 data available at that look. Persisting the decisions (not just the
 measurements) is what makes a racing sweep kill/resume deterministic:
 a resumed run replays the recorded verdicts instead of re-deciding on a
-possibly-larger record set. Loading skips undecodable
+possibly-larger record set. Calibration fits (:mod:`repro.calibrate`)
+reuse the same idea with ``{"kind": "calib", ...}`` (the fit manifest:
+parameter space bounds, target fingerprint, design) and ``{"kind":
+"calib-round", ...}`` (one line per completed search round: the
+incumbent parameter vector, its objective, and every evaluation the
+round made) — a killed fit replays its persisted rounds and resumes the
+search mid-trajectory. Loading skips undecodable
 lines with a warning naming the line number and (best-effort) kind, and
 counts them in :attr:`ResultStore.n_corrupt`: a torn *tail* is the
 ordinary residue of a killed writer, a torn line *mid-file* is the
@@ -116,6 +122,9 @@ class StoreSnapshot:
     sweep_cells_by_id: dict = field(default_factory=dict)  # id -> {cell: fp}
     sweep_failed_by_id: dict = field(default_factory=dict)  # id -> {cell: info}
     sweep_alloc_by_id: dict = field(default_factory=dict)  # id -> [rounds]
+    calibs: list = field(default_factory=list)           # ids, file order
+    calib_manifests: dict = field(default_factory=dict)  # id -> manifest
+    calib_rounds_by_id: dict = field(default_factory=dict)  # id -> [rounds]
     n_corrupt: int = 0             # undecodable lines skipped in this pass
 
     def completed(self, fingerprint: str) -> set:
@@ -321,6 +330,71 @@ class ResultStore:
                 rounds.setdefault(int(o["round"]), o)
         return [rounds[k] for k in sorted(rounds)]
 
+    # -- calibration manifests --------------------------------------------
+
+    def append_calib(self, manifest: dict,
+                     snapshot: StoreSnapshot | None = None) -> str:
+        """Declare a calibration fit; returns its deterministic calib id.
+
+        The manifest (parameter space bounds, target fingerprint, case
+        list, design meta) plays the role :meth:`append_sweep`'s does for
+        sweeps: the id is a hash of the manifest content, so re-running
+        the same fit finds its own ``calib-round`` lines and resumes the
+        search instead of restarting it."""
+        blob = json.dumps(manifest, sort_keys=True, default=str)
+        calib_id = hashlib.sha256(blob.encode()).hexdigest()[:16]
+        if snapshot is not None:
+            if calib_id in snapshot.calibs:
+                return calib_id
+        else:
+            for obj in self._lines():
+                if obj.get("kind") == "calib" and obj["calib"] == calib_id:
+                    return calib_id
+        self._append(dict(kind="calib", calib=calib_id, manifest=manifest))
+        if snapshot is not None:
+            snapshot.calibs.append(calib_id)
+            snapshot.calib_manifests[calib_id] = manifest
+        return calib_id
+
+    def append_calib_round(self, calib_id: str, round: int, params: dict,
+                           objective: float, step: float, evals: list,
+                           spent_nrep: int) -> None:
+        """Record one completed search round of a calibration fit: the
+        incumbent parameter vector and objective after the round, the
+        step size the next round starts from, and every (params,
+        objective) evaluation the round made. Written *after* the round's
+        last measurement, so a killed fit either replays the persisted
+        round (line present) or re-evaluates through store-resumed
+        campaigns (line absent) — both paths land on the same search
+        trajectory."""
+        self._append(dict(
+            kind="calib-round", calib=calib_id, round=int(round),
+            params=_jsonable(params), objective=float(objective),
+            step=float(step), evals=_jsonable_value(evals),
+            spent_nrep=int(spent_nrep)))
+
+    def calib_rounds(self, calib_id: str) -> list[dict]:
+        """Round lines of a calibration fit, ordered by round index.
+        Duplicate round indices keep the *first* occurrence (same
+        rationale as :meth:`sweep_allocs`)."""
+        rounds: dict[int, dict] = {}
+        for o in self._lines():
+            if o.get("kind") == "calib-round" and o["calib"] == calib_id:
+                rounds.setdefault(int(o["round"]), o)
+        return [rounds[k] for k in sorted(rounds)]
+
+    def calib_manifest(self, calib_id: str | None = None) -> dict:
+        """The declared manifest of a calibration fit (default: last)."""
+        out: dict | None = None
+        for obj in self._lines():
+            if obj.get("kind") != "calib":
+                continue
+            if calib_id is None or obj["calib"] == calib_id:
+                out = obj["manifest"]
+        if out is None:
+            raise KeyError(f"no calib {calib_id!r} in {self.path}")
+        return out
+
     def sweep_cells_failed(self, sweep_id: str) -> dict[int, dict]:
         """``cell index -> quarantine info`` of every quarantined cell.
 
@@ -392,6 +466,16 @@ class ResultStore:
                         error=o.get("error", ""))
             elif kind == "sweep-alloc":
                 rounds = snap.sweep_alloc_by_id.setdefault(o["sweep"], [])
+                if not any(int(r["round"]) == int(o["round"])
+                           for r in rounds):
+                    rounds.append(o)
+                    rounds.sort(key=lambda r: int(r["round"]))
+            elif kind == "calib":
+                if o["calib"] not in snap.calibs:
+                    snap.calibs.append(o["calib"])
+                snap.calib_manifests[o["calib"]] = o.get("manifest", {})
+            elif kind == "calib-round":
+                rounds = snap.calib_rounds_by_id.setdefault(o["calib"], [])
                 if not any(int(r["round"]) == int(o["round"])
                            for r in rounds):
                     rounds.append(o)
@@ -503,18 +587,31 @@ class ResultStore:
         return analyze_records(self.records(fingerprint), outlier_filter)
 
 
+def _jsonable_value(v):
+    """One value made JSON-serializable, *recursively*: numpy scalars and
+    arrays convert losslessly at any nesting depth (a ``meta["jit"]``
+    telemetry dict or a calibration fit report full of ``np.float64`` must
+    round-trip as numbers, not ``repr()`` strings), containers convert
+    element-wise, and only a leaf that still defies ``json.dumps`` after
+    all that degrades to its ``repr``."""
+    if isinstance(v, np.bool_):
+        return bool(v)
+    if isinstance(v, np.integer):
+        return int(v)
+    if isinstance(v, np.floating):
+        return float(v)
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, dict):
+        return {str(k): _jsonable_value(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable_value(x) for x in v]
+    try:
+        json.dumps(v)
+    except (TypeError, ValueError):
+        return repr(v)
+    return v
+
+
 def _jsonable(meta: dict) -> dict:
-    out = {}
-    for k, v in (meta or {}).items():
-        if isinstance(v, (np.integer,)):
-            v = int(v)
-        elif isinstance(v, (np.floating,)):
-            v = float(v)
-        elif isinstance(v, np.ndarray):
-            v = v.tolist()
-        try:
-            json.dumps(v)
-        except TypeError:
-            v = repr(v)
-        out[k] = v
-    return out
+    return {str(k): _jsonable_value(v) for k, v in (meta or {}).items()}

@@ -1,0 +1,50 @@
+"""Warnings that point at the *user's* code, not the library's.
+
+``warnings.warn(..., stacklevel=N)`` attributes a warning to the frame N
+levels above the ``warn`` call — but a hardcoded N is only right for one
+call depth. The engine-fallback warning, for example, fires from
+``SimBackend._warn_fallback`` which is reached through ``make_epoch`` →
+``_SimEpoch.__init__`` at depths that differ between a direct
+``backend.make_epoch(0)`` and a ``Campaign(...).run()``; any fixed
+``stacklevel`` points *inside* ``repro`` for at least one of them, and a
+``filterwarnings`` keyed on the caller's module can never match.
+
+:func:`warn_external` computes the stacklevel at call time by walking the
+stack past every frame that lives inside the ``repro`` package (plus any
+explicitly skipped files), so the warning lands on the first external
+caller — what Python 3.12's ``skip_file_prefixes`` does, implemented here
+because the supported floor is 3.10.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import warnings
+
+__all__ = ["warn_external"]
+
+#: Absolute directory of the ``repro`` package (``src/repro``): frames
+#: whose code lives under it are library internals a warning should skip.
+_PKG_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _is_internal(filename: str, skip_files: tuple) -> bool:
+    path = os.path.abspath(filename)
+    if path.startswith(_PKG_DIR + os.sep):
+        return True
+    return any(path == os.path.abspath(s) for s in skip_files)
+
+
+def warn_external(message: str, category: type = UserWarning,
+                  skip_files: tuple = ()) -> None:
+    """``warnings.warn`` attributed to the first caller frame outside
+    ``repro`` (and outside ``skip_files`` — pass a module's ``__file__``
+    to skip a shim's own frames as well)."""
+    level = 1                    # stacklevel=1 == this function's frame
+    frame = sys._getframe(0)
+    while frame is not None and _is_internal(frame.f_code.co_filename,
+                                             skip_files):
+        frame = frame.f_back
+        level += 1
+    warnings.warn(message, category, stacklevel=level)

@@ -209,6 +209,40 @@ class RunArchive:
                 continue
         return self.root / f"{stem}-{n:03d}.jsonl"
 
+    def log_calibration(self, entry: RunEntry, report: dict) -> None:
+        """Append a calibration fit report to the manifest, keyed by the
+        registered run — the archive-level record of *how* a run earned
+        its ``calibrated`` tag (fitted params, objective trace, per-cell
+        verdicts). A separate line kind, not a :class:`RunEntry` field:
+        :meth:`entries` filters by ``kind == "run"``, so older readers
+        skip these lines untouched (the store schema's forward-compat
+        rule applied to the manifest)."""
+        self.root.mkdir(parents=True, exist_ok=True)
+        with open(self.manifest_path, "a") as f:
+            f.write(json.dumps(dict(kind="calibration",
+                                    run_id=entry.run_id, report=report),
+                               sort_keys=True) + "\n")
+            f.flush()
+
+    def calibrations(self, run_id: str | None = None) -> list[dict]:
+        """Calibration reports in log order, optionally for one run."""
+        if not self.manifest_path.exists():
+            return []
+        out: list[dict] = []
+        with open(self.manifest_path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    o = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if o.get("kind") == "calibration" and \
+                        (run_id is None or o.get("run_id") == run_id):
+                    out.append(o)
+        return out
+
     # -- lookups (manifest only — stores are never re-parsed here) --------
 
     def entries(self) -> list[RunEntry]:

@@ -23,10 +23,11 @@ from .alloc import (POLICIES, AllocationPolicy, AllocState, RacingPolicy,
                     make_policy)
 from .axes import (DEFAULT_SWEEP_AXES, MISTUNED_PER_OP_KW, default_sim_sweep,
                    sim_axes)
-from .effects import (AxisDecision, AxisEffect, CellData, InteractionEffect,
-                      PairEffect, alpha_spending, axis_decisions,
-                      cells_from_result, cells_from_store,
-                      format_factor_report, interaction_screen, main_effects)
+from .effects import (DEFAULT_QUANTILES, AxisDecision, AxisEffect, CellData,
+                      InteractionEffect, PairEffect, alpha_spending,
+                      axis_decisions, cells_from_result, cells_from_store,
+                      format_factor_report, interaction_screen, main_effects,
+                      quantile_distance)
 
 __all__ = [
     "sim_axes",
@@ -45,6 +46,8 @@ __all__ = [
     "alpha_spending",
     "interaction_screen",
     "format_factor_report",
+    "quantile_distance",
+    "DEFAULT_QUANTILES",
     "AllocationPolicy",
     "AllocState",
     "RoundPlan",

@@ -1,0 +1,306 @@
+"""The sim↔real calibration loop: parameter surface, fitting engine,
+held-out TOST certification, and the calib/calib-round store plumbing
+that makes a killed fit resumable.
+
+The fast tier exercises the machinery end to end with tiny designs
+(sim-as-target, 1-2 knobs); the ``slow`` tier holds the soundness pins —
+parameter recovery against a known truth, self-calibration EQUIVALENT,
+and the frozen mis-fit positive control that must come back DRIFTED.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.calibrate import (CALIBRATED_TAG, CalibrationParam,
+                             CalibrationSpace, calibrate, certify_heldout,
+                             default_space)
+from repro.campaign import Campaign, CampaignSpec, ResultStore, SimBackend
+from repro.core import ExperimentDesign, TestCase
+from repro.history import RunArchive
+
+FAST_SYNC = dict(n_fitpts=100, n_exchanges=20)
+
+
+def _base(seed0=0, **kw):
+    kw.setdefault("sync_kw", dict(FAST_SYNC))
+    return SimBackend(p=4, seed0=seed0, **kw)
+
+
+def _design(**kw):
+    kw.setdefault("n_launch_epochs", 8)
+    kw.setdefault("nrep", 20)
+    kw.setdefault("seed", 3)
+    return ExperimentDesign(**kw)
+
+
+CASES = [TestCase("allreduce", 512), TestCase("bcast", 512)]
+
+
+# ---------------------------------------------------------------------------
+# CalibrationSpace: the declarative parameter surface
+
+
+def test_param_rejects_typoed_field():
+    # a typo'd knob would otherwise "fit" by never changing anything
+    with pytest.raises(ValueError, match="not a SimCollective field"):
+        CalibrationParam("op.noise_sgima", 0.0, 1.0)
+    with pytest.raises(ValueError, match="not a ClockParams field"):
+        CalibrationParam("clock.rw_sgima", 0.0, 1.0)
+
+
+def test_param_rejects_malformed_names_and_bounds():
+    with pytest.raises(ValueError, match="name must be"):
+        CalibrationParam("noise_sigma", 0.0, 1.0)   # no prefix
+    with pytest.raises(ValueError, match="name must be"):
+        CalibrationParam("op.alpha.extra", 0.0, 1.0)
+    with pytest.raises(ValueError, match="lo < hi"):
+        CalibrationParam("op.alpha", 1.0, 1.0)
+    with pytest.raises(ValueError, match="init"):
+        CalibrationParam("op.alpha", 0.0, 1.0, init=2.0)
+
+
+def test_param_clip_snaps_to_resolution():
+    p = CalibrationParam("op.noise_sigma", 0.0, 1.0, resolution=0.01)
+    assert p.clip(0.123456) == pytest.approx(0.12)
+    assert p.clip(-5.0) == 0.0
+    assert p.clip(5.0) == 1.0
+
+
+def test_space_materialize_routes_all_three_kinds():
+    space = CalibrationSpace(
+        params=(CalibrationParam("op.noise_sigma", 0.0, 0.5),
+                CalibrationParam("per_op.bcast.alpha", 1e-6, 9e-6),
+                CalibrationParam("clock.rw_sigma", 0.0, 1e-6)),
+        base=_base())
+    b = space.materialize({"op.noise_sigma": 0.1,
+                           "per_op.bcast.alpha": 4e-6,
+                           "clock.rw_sigma": 2e-7})
+    assert b.op_kw["noise_sigma"] == pytest.approx(0.1)
+    assert b.per_op_kw["bcast"]["alpha"] == pytest.approx(4e-6)
+    assert b.clock_kw["rw_sigma"] == pytest.approx(2e-7)
+    # the base backend is untouched (dataclass replacement, not mutation)
+    assert "noise_sigma" not in space.base.op_kw
+
+
+def test_space_distinct_points_distinct_fingerprints():
+    space = default_space(base=_base(), names=["op.noise_sigma"])
+    design = _design()
+    fp = lambda b: b.factors(design).fingerprint()  # noqa: E731
+    assert fp(space.materialize({"op.noise_sigma": 0.05})) \
+        != fp(space.materialize({"op.noise_sigma": 0.06}))
+    # same point (after resolution snap) -> same fingerprint: resume works
+    assert fp(space.materialize({"op.noise_sigma": 0.05})) \
+        == fp(space.materialize({"op.noise_sigma": 0.05 + 1e-13}))
+
+
+def test_default_space_subset_and_unknown():
+    space = default_space(names=["op.alpha", "clock.rw_sigma"])
+    assert space.names() == ["op.alpha", "clock.rw_sigma"]
+    with pytest.raises(ValueError, match="unknown params"):
+        default_space(names=["op.nope"])
+    with pytest.raises(KeyError, match="unknown params"):
+        default_space(names=["op.alpha"]).clip({"op.beta": 1.0})
+
+
+def test_default_space_latency_scale_widens_alpha_gamma_only():
+    # a dispatch-heavy real target (jax pmap: hundreds of µs/call) needs
+    # wider absolute-latency bounds; the relative noise knobs must not move
+    ref = {p.name: p for p in default_space().params}
+    wide = {p.name: p for p in default_space(latency_scale=100.0).params}
+    assert wide["op.alpha"].hi == pytest.approx(100 * ref["op.alpha"].hi)
+    assert wide["op.gamma"].hi == pytest.approx(100 * ref["op.gamma"].hi)
+    assert wide["op.noise_sigma"].hi == ref["op.noise_sigma"].hi
+    assert wide["op.tail_prob"].hi == ref["op.tail_prob"].hi
+    with pytest.raises(ValueError, match="latency_scale"):
+        default_space(latency_scale=0)
+
+
+# ---------------------------------------------------------------------------
+# calib / calib-round store lines
+
+
+def test_store_calib_lines_roundtrip(tmp_path):
+    store = ResultStore(tmp_path / "c.jsonl")
+    cid = store.append_calib(dict(name="x", space={"p": 1}))
+    # idempotent on content: same manifest -> same id, no duplicate line
+    assert store.append_calib(dict(name="x", space={"p": 1})) == cid
+    store.append_calib_round(cid, 0, {"op.alpha": 2e-6}, 0.5, 0.25,
+                             [[{"op.alpha": 2e-6}, 0.5]], 100)
+    store.append_calib_round(cid, 1, {"op.alpha": 3e-6}, 0.3, 0.25, [], 200)
+    # a torn/duplicated round line must not fork the replay trajectory
+    store.append_calib_round(cid, 1, {"op.alpha": 9e-6}, 9.9, 0.9, [], 999)
+    rounds = store.calib_rounds(cid)
+    assert [r["round"] for r in rounds] == [0, 1]
+    assert rounds[1]["objective"] == pytest.approx(0.3)  # first wins
+    assert store.calib_manifest(cid)["name"] == "x"
+    snap = store.snapshot()
+    assert [r["round"] for r in snap.calib_rounds_by_id[cid]] == [0, 1]
+
+
+def test_store_jsonable_recurses_into_containers(tmp_path):
+    """Regression: numpy scalars nested inside dicts/lists/tuples used to
+    reach json.dump unconverted and crash (or round-trip as repr strings
+    via the fallback)."""
+    store = ResultStore(tmp_path / "m.jsonl")
+    store.append_meta(nested=dict(
+        a=np.float64(1.5), b=[np.int64(2), (np.bool_(True),)],
+        c={"deep": {"arr": np.arange(3)}}))
+    with open(store.path) as f:
+        lines = [json.loads(ln) for ln in f if ln.strip()]
+    meta = [ln for ln in lines if ln["kind"] == "meta"][0]
+    assert meta["nested"] == dict(a=1.5, b=[2, [True]],
+                                  c={"deep": {"arr": [0, 1, 2]}})
+    # and the store's own reader agrees
+    assert store.meta()["nested"]["c"]["deep"]["arr"] == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# calibrate(): guards and end-to-end behavior (tiny designs)
+
+
+def test_calibrate_requires_store():
+    with pytest.raises(ValueError, match="store is required"):
+        calibrate(default_space(base=_base(), names=["op.alpha"]),
+                  _base(seed0=99))
+
+
+def test_calibrate_rejects_shared_seed0(tmp_path):
+    # same seed0 on both sides would fit one noise realization, not the
+    # distribution
+    with pytest.raises(ValueError, match="share seed0"):
+        calibrate(default_space(base=_base(seed0=7), names=["op.alpha"]),
+                  _base(seed0=7), cases=CASES, design=_design(),
+                  store=ResultStore(tmp_path / "s.jsonl"))
+
+
+def test_calibrate_needs_heldout_epochs(tmp_path):
+    with pytest.raises(ValueError, match="n_fit_epochs"):
+        calibrate(default_space(base=_base(), names=["op.alpha"]),
+                  _base(seed0=99), cases=CASES,
+                  design=_design(n_launch_epochs=4), n_fit_epochs=3,
+                  store=ResultStore(tmp_path / "s.jsonl"))
+
+
+def _fit_small(tmp_path, stem="a", **kw):
+    """One tiny but complete fit: sim truth with a shifted alpha, one-knob
+    space, archived."""
+    truth = _base(seed0=1009, op_kw=dict(alpha=6e-6))
+    space = default_space(base=_base(seed0=0), names=["op.alpha"])
+    archive = RunArchive(tmp_path / f"arch-{stem}")
+    store = ResultStore(tmp_path / f"store-{stem}.jsonl")
+    kw.setdefault("design", _design())
+    kw.setdefault("max_rounds", 3)
+    res = calibrate(space, truth, cases=CASES, store=store, archive=archive,
+                    seed=3, **kw)
+    return res, store, archive
+
+
+def test_calibrate_end_to_end_archives_and_reports(tmp_path):
+    res, store, archive = _fit_small(tmp_path)
+    assert res.report is not None and res.verdict != "UNCERTIFIED"
+    assert not any(c.verdict == "DRIFTED" for c in res.report.cells)
+    assert len(res.rounds) >= 1 and res.n_rounds_resumed == 0
+    # objective trace is monotone non-increasing (first-improvement descent)
+    objs = [r["objective"] for r in res.rounds]
+    assert all(b <= a + 1e-12 for a, b in zip(objs, objs[1:]))
+    # archived under the calibrated tag, report in the manifest
+    assert res.run_entry.tag == CALIBRATED_TAG
+    reports = archive.calibrations(res.run_entry.run_id)
+    assert len(reports) == 1
+    assert reports[0]["report"]["params"] == res.params
+    # the report is also stamped on the store (excluded from content id)
+    assert store.meta()["calibration"]["calib"] == res.calib_id
+
+
+def test_calibrate_kill_resume_replays_identically(tmp_path):
+    """Kill the fit after its first persisted round; the resumed fit must
+    replay the round (not re-decide it) and converge to the identical
+    params, objective, and store content."""
+    res_full, store_full, _ = _fit_small(tmp_path, stem="full")
+
+    # rebuild a "killed" store: everything up to and including the first
+    # calib-round line, truncated at a line boundary
+    with open(store_full.path) as f:
+        lines = f.readlines()
+    first_round = next(i for i, ln in enumerate(lines)
+                       if json.loads(ln).get("kind") == "calib-round")
+    killed = tmp_path / "store-killed.jsonl"
+    killed.write_text("".join(lines[:first_round + 1]))
+
+    truth = _base(seed0=1009, op_kw=dict(alpha=6e-6))
+    space = default_space(base=_base(seed0=0), names=["op.alpha"])
+    res2 = calibrate(space, truth, cases=CASES, design=_design(),
+                     max_rounds=3, seed=3,
+                     store=ResultStore(killed),
+                     archive=RunArchive(tmp_path / "arch-resumed"))
+    assert res2.n_rounds_resumed == 1
+    assert res2.params == res_full.params
+    assert res2.objective == pytest.approx(res_full.objective)
+    assert res2.verdict == res_full.verdict
+
+    def content(path):
+        with open(path) as f:
+            return [ln for ln in f
+                    if json.loads(ln).get("kind") != "meta"]
+    # byte-compatible replay: identical non-meta line sequences (run ids
+    # still differ — the archive hashes the store's relative path in)
+    assert content(killed) == content(store_full.path)
+
+
+def test_calibrate_budget_stops_early(tmp_path):
+    res, _, _ = _fit_small(tmp_path, stem="budget", budget=1)
+    assert len(res.rounds) == 1          # checked at round boundaries
+    assert res.spent_nrep >= 1
+
+
+# ---------------------------------------------------------------------------
+# soundness tier: recovery, self-calibration, positive control
+
+
+@pytest.mark.slow
+def test_parameter_recovery_within_tolerance(tmp_path):
+    """Fit against a sim truth with a known shifted alpha: the fitted
+    value must land within 10% of the truth and certify EQUIVALENT."""
+    truth_alpha = 6e-6
+    truth = _base(seed0=1009, op_kw=dict(alpha=truth_alpha))
+    space = default_space(base=_base(seed0=0), names=["op.alpha"])
+    store = ResultStore(tmp_path / "rec.jsonl")
+    res = calibrate(space, truth, cases=CASES,
+                    design=_design(n_launch_epochs=24, nrep=30),
+                    store=store, seed=3, max_rounds=8)
+    assert res.params["op.alpha"] == pytest.approx(truth_alpha, rel=0.10)
+    assert res.verdict == "EQUIVALENT"
+
+
+@pytest.mark.slow
+def test_self_calibration_is_equivalent(tmp_path):
+    """Target and base share every noise parameter (different seed0): the
+    fit has nothing to move, and certification must say EQUIVALENT —
+    the procedure's null case."""
+    res = calibrate(
+        default_space(base=_base(seed0=0), names=["op.noise_sigma"]),
+        _base(seed0=4242), cases=CASES,
+        design=_design(n_launch_epochs=24, nrep=30),
+        store=ResultStore(tmp_path / "self.jsonl"), seed=5)
+    assert res.verdict == "EQUIVALENT"
+
+
+@pytest.mark.slow
+def test_frozen_misfit_is_drifted_positive_control(tmp_path):
+    """A deliberately mis-tuned frozen candidate (4x latency term) pushed
+    through the same certification path must come back DRIFTED — if it
+    does not, the certificate can never be trusted to fail."""
+    design = _design(n_launch_epochs=24, nrep=30)
+    store = ResultStore(tmp_path / "ctl.jsonl")
+    target = _base(seed0=1009)
+    misfit = _base(seed0=0, op_kw=dict(alpha=12e-6, gamma=6e-6))
+    t_res = Campaign(CampaignSpec(CASES, design, name="ctl/target"),
+                     target, store).run()
+    m_res = Campaign(CampaignSpec(CASES, design, name="ctl/misfit"),
+                     misfit, store).run()
+    report = certify_heldout(t_res.records, m_res.records,
+                             n_fit_epochs=16, design=design, seed=5)
+    assert not report.ok
+    assert any(c.verdict == "DRIFTED" for c in report.cells)

@@ -71,6 +71,26 @@ def test_sim_backend_jax_engine_fallback_warns_once_and_is_recorded():
     assert all("engine_fallback" in r.meta for r in res.records)
 
 
+def test_sim_backend_fallback_warning_points_at_caller():
+    """The engine-fallback RuntimeWarning must be attributed to the code
+    that asked for the engine (this file), not to a frame inside repro —
+    ``warnings.filterwarnings(module=...)`` and editor jump-to-source
+    both key off that location."""
+    import warnings
+
+    backend = _sim(seed0=5, engine="jax", clock_kw=dict(rw_sigma=1e-7))
+    spec = _spec([TestCase("bcast", 256)], n_launch_epochs=2, nrep=10)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        Campaign(spec, backend).run()
+    fallback = [w for w in caught if issubclass(w.category, RuntimeWarning)
+                and "resolved to" in str(w.message)]
+    assert len(fallback) == 1
+    assert fallback[0].filename == __file__, (
+        f"fallback warning attributed to {fallback[0].filename}, "
+        f"expected {__file__}")
+
+
 def test_sim_backend_jax_engine_end_to_end():
     """A campaign through the jit-compiled engine: right shapes, engine
     recorded, and means in the same ballpark as the numpy engine."""

@@ -61,6 +61,21 @@ def test_legacy_invocation_still_runs(capsys):
     assert "bench_micro_sweeps" in capsys.readouterr().out
 
 
+def test_legacy_warning_points_at_caller(capsys):
+    """The DeprecationWarning's source location must be main()'s caller
+    (this file), not a frame inside benchmarks.run — that location is
+    what shows up in CI logs telling people *their* invocation to fix."""
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        main(["--list"])
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)
+           and "subcommand form" in str(w.message)]
+    assert len(dep) == 1
+    assert dep[0].filename == __file__, (
+        f"legacy-CLI warning attributed to {dep[0].filename}, "
+        f"expected {__file__}")
+
+
 def test_run_list_subcommand(capsys):
     main(["run", "--list"])
     out = capsys.readouterr().out
@@ -80,6 +95,56 @@ def test_flag_validation(argv, msg, capsys):
         main(argv)
     assert exc.value.code == 2
     assert msg in capsys.readouterr().err
+
+
+def test_calibrate_subcommand_end_to_end(tmp_path, capsys):
+    """The calibration loop through the real CLI: sim-as-target, tiny
+    grid; must archive the store under the calibrated tag and exit 0
+    (no DRIFTED held-out cell)."""
+    archive = tmp_path / "arch"
+    main(["calibrate", "--target", "sim", "--archive", str(archive),
+          "--params", "op.alpha", "--rounds", "2", "--epochs", "6",
+          "--nrep", "15", "--p", "4"])
+    cap = capsys.readouterr()
+    captured = cap.out + cap.err
+    from repro.history import RunArchive
+    entries = RunArchive(archive).entries()
+    assert len(entries) == 1 and entries[0].tag == "calibrated"
+    assert len(RunArchive(archive).calibrations()) == 1
+    assert "calibration certification" in captured or "# fitted" in captured
+
+
+def test_calibrate_rejects_unknown_param(tmp_path, capsys):
+    with pytest.raises(SystemExit) as exc:
+        main(["calibrate", "--archive", str(tmp_path / "a"),
+              "--params", "op.nope"])
+    assert exc.value.code == 2
+    assert "unknown params" in capsys.readouterr().err
+
+
+def test_missing_trajectory_artifacts(tmp_path):
+    """check_regression must surface BENCH_PR*.json files the perf log
+    references but that were never committed — a silently thinning
+    trajectory used to pass without a word."""
+    from benchmarks.check_regression import missing_trajectory_artifacts
+
+    changes = tmp_path / "CHANGES.md"
+    bench = tmp_path / "benchmarks"
+    bench.mkdir()
+    changes.write_text("committed BENCH_PR7.json; later BENCH_PR9.json\n")
+    (bench / "BENCH_PR7.json").write_text("{}")
+    assert missing_trajectory_artifacts(str(changes), str(bench)) \
+        == ["BENCH_PR9.json"]
+    # no log at all -> nothing referenced -> nothing missing
+    assert missing_trajectory_artifacts(str(tmp_path / "nope.md"),
+                                        str(bench)) == []
+    # the real repo's trajectory must currently be hole-free
+    import os
+
+    import benchmarks.check_regression as cr
+    bdir = os.path.dirname(os.path.abspath(cr.__file__))
+    assert missing_trajectory_artifacts(
+        os.path.join(os.path.dirname(bdir), "CHANGES.md"), bdir) == []
 
 
 def test_sweep_policy_end_to_end(tmp_path, capsys):
